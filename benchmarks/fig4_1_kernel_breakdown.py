@@ -1,0 +1,48 @@
+"""Paper Fig 4.1: breakdown of DG execution time by kernel.
+
+Times each kernel of this repo's solver in isolation (jit'd, CPU) on the
+paper's configuration family and reports the percentage breakdown next to
+the paper's published averages (volume_loop ~40%, int_flux ~25%, ...).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.dg.operators import dg_rhs, extract_face, stress, surface_rhs, volume_rhs
+from repro.dg.rk import lsrk45_step
+from repro.dg.solver import gaussian_pulse, make_two_tree_solver
+
+PAPER_SHARES = {"volume_loop": 40, "int_flux": 25, "interp_q": 8, "lift+rk": 18, "other": 9}
+
+
+def run(grid=(8, 8, 8), order=5):
+    s = make_two_tree_solver(grid=grid, order=order, extent=(2.0, 1.0, 1.0), dtype="float32")
+    q = gaussian_pulse(s, center=(0.5, 0.5, 0.5)).astype(jnp.float32)
+
+    vol = jax.jit(lambda q: volume_rhs(q, s.D, s.metrics, s.rho_j, s.lam_j, s.mu_j))
+    surf = jax.jit(lambda q: surface_rhs(q, s.neighbors, s.lift, s.rho_j, s.lam_j, s.mu_j, s.cp_j, s.cs_j))
+    interp = jax.jit(lambda q: [extract_face(q, f) for f in range(6)])
+    rhs = jax.jit(s.rhs)
+    rk = jax.jit(lambda q, r: lsrk45_step(q, r, lambda x: x, 1e-3))
+
+    t_vol = timeit(vol, q)
+    t_surf = timeit(surf, q)
+    t_interp = timeit(interp, q)
+    t_rk = timeit(rk, q, jnp.zeros_like(q))
+    t_rhs = timeit(rhs, q)
+
+    total = t_vol + t_surf + t_interp + t_rk
+    emit("fig4_1/volume_loop", t_vol * 1e6, f"{100*t_vol/total:.0f}% (paper ~40%)")
+    emit("fig4_1/int_flux+lift", t_surf * 1e6, f"{100*t_surf/total:.0f}% (paper ~33%)")
+    emit("fig4_1/interp_q", t_interp * 1e6, f"{100*t_interp/total:.0f}% (paper ~8%)")
+    emit("fig4_1/rk", t_rk * 1e6, f"{100*t_rk/total:.0f}% (paper ~10%)")
+    emit("fig4_1/full_rhs", t_rhs * 1e6, f"K={s.mesh.K} order={order}")
+    return {"volume": t_vol, "surface": t_surf, "interp": t_interp, "rk": t_rk}
+
+
+if __name__ == "__main__":
+    run()

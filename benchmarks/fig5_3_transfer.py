@@ -1,0 +1,37 @@
+"""Paper Fig 5.3: CPU<->accelerator transfer time vs message size.
+
+Two curves: (a) measured host<->device transfer on THIS machine
+(device_put + device_get of pinned numpy arrays — the PCI analogue), and
+(b) the alpha-beta models for the paper's PCI bus and the target fabric
+(ICI / DCN) used by the cost model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.topology import DCN_LINK, ICI_LINK, STAMPEDE_PCI
+
+
+def run():
+    for mb in (1, 8, 64, 256):
+        arr = np.random.default_rng(0).standard_normal(mb * 131072).astype(np.float64)  # mb MiB
+        t0 = time.perf_counter()
+        d = jax.device_put(arr)
+        d.block_until_ready()
+        _ = np.asarray(d)
+        dt = time.perf_counter() - t0
+        emit(f"fig5_3/measured_roundtrip_{mb}MiB", dt * 1e6, f"{2*mb/1024/dt:.2f} GiB/s eff")
+    for mb in (1, 64, 256):
+        nbytes = mb * 2**20
+        emit(f"fig5_3/model_pci_{mb}MiB", STAMPEDE_PCI.time(nbytes) * 1e6, "paper PCI 6GB/s")
+        emit(f"fig5_3/model_ici_{mb}MiB", ICI_LINK.time(nbytes) * 1e6, "v5e ICI 50GB/s/link")
+        emit(f"fig5_3/model_dcn_{mb}MiB", DCN_LINK.time(nbytes) * 1e6, "inter-pod DCN")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: every paper table/figure, plus kernel microbenches.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig4_1 ... # subset
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig4_1_kernel_breakdown,
+        fig5_2_load_fraction,
+        fig5_3_transfer,
+        fig6_2_kernels,
+        table6_1_speedup,
+    )
+
+    suites = {
+        "fig4_1": fig4_1_kernel_breakdown.run,
+        "fig5_2": fig5_2_load_fraction.run,
+        "fig5_3": fig5_3_transfer.run,
+        "table6_1": table6_1_speedup.run,
+        "fig6_2": fig6_2_kernels.run,
+    }
+    picked = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in picked:
+        suites[name]()
+
+
+if __name__ == "__main__":
+    main()

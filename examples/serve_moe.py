@@ -1,0 +1,19 @@
+"""Serving example: batched greedy decoding from a (reduced) Mixtral-style
+MoE with rolling SWA caches, via the production serve step.
+
+Run:  PYTHONPATH=src python examples/serve_moe.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = ["serve", "--arch", "mixtral-8x22b", "--smoke",
+                "--batch", "4", "--prompt-len", "48", "--gen", "24"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

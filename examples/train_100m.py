@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~100M-parameter member of the qwen2 family
+for a few hundred steps on this machine, with the full production substrate
+(grad-accumulation step, AdamW + cosine, async checkpoints, fault-tolerant
+supervisor, deterministic pipeline).
+
+~100M config: 12 layers, d_model 768, 12 heads (GQA kv 4), d_ff 2048,
+vocab 32000 -> 104M params.  On 1 CPU core a step takes ~1s at batch 8 x
+seq 256; pass --steps 300 for the full run (default 40 keeps CI fast).
+
+Run:  PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_driver
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+# a real ~100M member of the qwen2 family (GQA + gated-silu + rope)
+register(ModelConfig(
+    arch_id="qwen2-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab_size=32000,
+    head_dim=64,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    dtype="float32",
+    remat="none",
+    tp_size=1,
+))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/qwen2_100m_ckpt")
+    args = ap.parse_args()
+
+    sys.argv = [
+        "train", "--arch", "qwen2-100m", "--smoke",
+        "--steps", str(args.steps), "--batch", str(args.batch),
+        "--seq-len", str(args.seq_len), "--lr", "6e-4", "--warmup", "20",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--metrics-out", "/tmp/qwen2_100m_metrics.jsonl",
+    ]
+    # --smoke keeps the 1-device debug mesh but we want the REAL config, so
+    # patch smoke_config to identity for this arch
+    import repro.launch.train as t
+    orig = t.smoke_config
+    t.smoke_config = lambda cfg: cfg if cfg.arch_id == "qwen2-100m" else orig(cfg)
+    train_driver.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Perf hillclimb driver: re-lowers the three picked cells with candidate
+changes and records roofline-term deltas per iteration.
+
+  PYTHONPATH=src python experiments/hillclimb.py qwen_prefill
+  PYTHONPATH=src python experiments/hillclimb.py mixtral_train
+  PYTHONPATH=src python experiments/hillclimb.py mamba_train
+  PYTHONPATH=src python experiments/hillclimb.py podwise       # beyond-paper
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+
+from repro.launch.dryrun import run_cell
+
+
+def show(tag, r):
+    row = {
+        "tag": tag,
+        "t_compute_s": round(r["t_compute_s"], 3),
+        "t_memory_s": round(r["t_memory_s"], 3),
+        "t_collective_s": round(r["t_collective_s"], 3),
+        "dominant": r["dominant"],
+        "flops": r["flops"],
+        "mem_bytes_fused": r["mem_bytes_fused"],
+        "coll_bytes": r["collective_bytes_total"],
+        "temp_gib": round(r.get("temp_size_in_bytes", 0) / 2**30, 2),
+        "compile_s": r["compile_s"],
+    }
+    print(json.dumps(row), flush=True)
+    return row
+
+
+def qwen_prefill():
+    """qwen2.5-32b/prefill_32k — worst useful-FLOPs cell."""
+    base = run_cell("qwen2.5-32b", "prefill_32k", False)
+    show("baseline(masked full KV sweep)", base)
+    # it 1: causal-skip flash (dynamic fori bound); expected compute ~ /2
+    nk = 32768 // 512
+    it1 = run_cell("qwen2.5-32b", "prefill_32k", False,
+                   extra_cfg={"flash_skip": True}, dynamic_trips=(nk + 1) / 2)
+    show("it1: causal-skip flash", it1)
+    # it 2: larger blocks (fewer loop iterations, bigger matmuls)
+    it2 = run_cell("qwen2.5-32b", "prefill_32k", False,
+                   extra_cfg={"flash_skip": True, "attn_block_q": 1024, "attn_block_k": 1024},
+                   dynamic_trips=(32768 // 1024 + 1) / 2)
+    show("it2: it1 + attn blocks 1024", it2)
+    # it 3: blocks 2048
+    it3 = run_cell("qwen2.5-32b", "prefill_32k", False,
+                   extra_cfg={"flash_skip": True, "attn_block_q": 2048, "attn_block_k": 2048},
+                   dynamic_trips=(32768 // 2048 + 1) / 2)
+    show("it3: it1 + attn blocks 2048", it3)
+
+
+def mixtral_train():
+    """mixtral-8x22b/train_4k — most collective-bound."""
+    base = run_cell("mixtral-8x22b", "train_4k", False)
+    show("baseline(accum=16, micro 1/dev)", base)
+    # it 1: micro 4/device -> accum 4: FSDP weight all-gathers amortized 4x
+    it1 = run_cell("mixtral-8x22b", "train_4k", False, micro_per_device=4)
+    show("it1: micro 4/dev (accum 4)", it1)
+    # it 2: capacity factor 1.0 (fewer a2a slot bytes, more drops)
+    it2 = run_cell("mixtral-8x22b", "train_4k", False, micro_per_device=4,
+                   extra_cfg={"capacity_factor": 1.0})
+    show("it2: it1 + capacity 1.0", it2)
+    # it 3: remat policy dots (trade memory for recompute flops)
+    it3 = run_cell("mixtral-8x22b", "train_4k", False, micro_per_device=4,
+                   extra_cfg={"remat": "none"})
+    show("it3: it1 + no remat (memory for flops)", it3)
+
+
+def mamba_train():
+    """falcon-mamba-7b/train_4k — worst memory dominance."""
+    base = run_cell("falcon-mamba-7b", "train_4k", False)
+    show("baseline(assoc scan, chunk 128)", base)
+    it1 = run_cell("falcon-mamba-7b", "train_4k", False, extra_cfg={"ssm_scan": "seq"})
+    show("it1: sequential time scan", it1)
+    it2 = run_cell("falcon-mamba-7b", "train_4k", False, extra_cfg={"ssm_chunk": 512})
+    show("it2: assoc, chunk 512", it2)
+    it3 = run_cell("falcon-mamba-7b", "train_4k", False, extra_cfg={"ssm_chunk": 64})
+    show("it3: assoc, chunk 64", it3)
+    it4 = run_cell("falcon-mamba-7b", "train_4k", False, micro_per_device=4)
+    show("it4: assoc c128, micro 4/dev", it4)
+
+
+def podwise():
+    """Beyond-paper: explicit podwise gradient sync on the multi-pod mesh,
+    optionally int8-compressed on the slow (DCN) hop."""
+    base = run_cell("qwen2.5-32b", "train_4k", True)
+    show("baseline(GSPMD auto sync, 2x16x16)", base)
+    p1 = run_cell("qwen2.5-32b", "train_4k", True, grad_sync="podwise")
+    show("podwise: explicit inter-pod pmean", p1)
+    p2 = run_cell("qwen2.5-32b", "train_4k", True, grad_sync="podwise_int8")
+    show("podwise_int8: inter-pod int8+scales", p2)
+
+
+if __name__ == "__main__":
+    {"qwen_prefill": qwen_prefill, "mixtral_train": mixtral_train,
+     "mamba_train": mamba_train, "podwise": podwise}[sys.argv[1]]()

@@ -1,0 +1,17 @@
+"""Assigned-architecture configs.  Importing this package registers all of
+them; ``repro.models.zoo.get_config(arch_id)`` is the lookup."""
+
+from repro.configs import (  # noqa: F401
+    dg_wave,
+    falcon_mamba_7b,
+    granite_3_8b,
+    hubert_xlarge,
+    hymba_1_5b,
+    llava_next_34b,
+    mixtral_8x22b,
+    olmoe_1b_7b,
+    qwen2_5_32b,
+    qwen2_7b,
+    stablelm_12b,
+)
+from repro.configs.shapes import SHAPES, Cell, cells_for, smoke_config  # noqa: F401

@@ -1,0 +1,22 @@
+"""Falcon-Mamba-7B — attention-free mamba-1 SSM. [arXiv:2410.05355; unverified]
+d_ff=0 per assignment: the mamba block carries its own 2x expansion."""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_chunk=1024,  # hillclimbed: -27% HBM traffic vs chunk 128 (EXPERIMENTS §Perf)
+    norm_eps=1e-5,
+    tp_size=16,
+))

@@ -1,0 +1,21 @@
+"""IBM Granite-3 8B — dense GQA decoder.
+[hf:ibm-granite/granite-3.0-2b-base family per assignment; hf]
+Note: vocab 49155 is not lane/TP-divisible; padded to 49280 internally."""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=12800,
+    vocab_size=49155,
+    head_dim=128,
+    rope_theta=10_000.0,
+    norm_eps=1e-5,
+    tp_size=16,
+))

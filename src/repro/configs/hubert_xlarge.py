@@ -1,0 +1,28 @@
+"""HuBERT X-Large — encoder-only audio transformer (w2v2 arch).
+[arXiv:2106.07447; unverified]
+
+Backbone-only per the assignment: the conv waveform frontend is a STUB;
+input_specs provides precomputed frame embeddings (B, S, d_model).  The
+learned convolutional positional embedding IS part of the backbone.
+Encoder-only: no decode shapes (recorded skip).  Vocab 504 = masked-
+prediction codebook targets; padded to 512 internally."""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    head_dim=80,
+    causal=False,
+    mlp_type="gelu",
+    use_conv_pos=True,
+    norm_eps=1e-5,
+    tp_size=16,
+))

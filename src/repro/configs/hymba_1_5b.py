@@ -1,0 +1,28 @@
+"""Hymba-1.5B — hybrid: parallel attention + mamba heads per layer, SWA with
+three global-attention layers, 128 learned meta tokens. [arXiv:2411.13676; hf]
+
+Head-sharding note: 16 % 5 kv heads != 0 -> kv is computed replicated across
+the model axis (DESIGN.md section 4); q heads padded 25 -> 32."""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    rope_theta=10_000.0,
+    norm_eps=1e-5,
+    sliding_window=1024,
+    global_layers=(0, 15, 31),
+    n_meta_tokens=128,
+    ssm_state=16,
+    ssm_expand=2,
+    tp_size=16,
+))

@@ -1,0 +1,25 @@
+"""LLaVA-NeXT 34B — VLM: dense GQA LM backbone + anyres image tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf family per assignment; unverified]
+
+Backbone-only per the assignment: the vision tower is a STUB — input_specs
+provides precomputed CLIP-L patch embeddings (anyres 5 tiles x 576 = 2880
+patch positions); the trained mm_proj projector is part of this model."""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    head_dim=128,
+    rope_theta=5_000_000.0,
+    norm_eps=1e-5,
+    frontend_tokens=2880,  # anyres: 5 tiles x 24x24 patches
+    tp_size=16,
+))

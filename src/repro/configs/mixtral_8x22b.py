@@ -1,0 +1,26 @@
+"""Mixtral-8x22B — MoE (8 experts, top-2) with sliding-window attention.
+[arXiv:2401.04088; hf]
+
+EP note: 8 experts < 16-wide expert axis -> each expert is replicated into
+2 shards (replica chosen by token parity); routing math unchanged."""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    norm_eps=1e-5,
+    sliding_window=4096,
+    n_experts=8,
+    experts_per_token=2,
+    tp_size=16,
+))

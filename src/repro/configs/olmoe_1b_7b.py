@@ -1,0 +1,22 @@
+"""OLMoE-1B-7B — MoE (64 experts, top-8), full attention, 16 kv heads.
+[arXiv:2409.02060; hf]"""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    head_dim=128,
+    rope_theta=10_000.0,
+    norm_eps=1e-5,
+    n_experts=64,
+    experts_per_token=8,
+    tp_size=16,
+))

@@ -1,0 +1,21 @@
+"""Qwen2.5-32B — dense GQA decoder with QKV bias.
+[hf:Qwen/Qwen2.5-0.5B config family scaled per assignment; hf]"""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    norm_eps=1e-6,
+    tp_size=16,
+))

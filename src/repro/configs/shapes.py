@@ -1,0 +1,95 @@
+"""Assigned input shapes, the 40-cell (arch x shape) grid, and smoke configs.
+
+Skip rules (recorded per cell, per the assignment):
+  * encoder-only archs have no decode step -> decode_32k / long_500k skipped;
+  * long_500k needs sub-quadratic sequence mixing -> runs only for SSM /
+    hybrid / SWA archs; skipped for pure full-attention archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch_id: str
+    shape: ShapeSpec
+    skip: Optional[str] = None  # reason, if skipped
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch_id}/{self.shape.name}"
+
+
+def _subquadratic(cfg: ModelConfig) -> bool:
+    if cfg.has_ssm and not cfg.global_layers:
+        return True
+    if cfg.has_ssm and cfg.global_layers:
+        return True  # hybrid: few global layers; decode is O(S) per step only there
+    return cfg.sliding_window is not None and not cfg.global_layers
+
+
+def cells_for(cfg: ModelConfig) -> List[Cell]:
+    cells = []
+    for s in SHAPES.values():
+        skip = None
+        if s.kind == "decode" and cfg.is_encoder_only:
+            skip = "encoder-only arch: no decode step"
+        elif s.name == "long_500k":
+            if cfg.is_encoder_only:
+                skip = "encoder-only arch: no decode step"
+            elif not (cfg.has_ssm or cfg.sliding_window is not None):
+                skip = "pure full-attention arch: 524k dense KV cache out of scope"
+        cells.append(Cell(cfg.arch_id, s, skip))
+    return cells
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config: tiny widths/depths, runnable on 1 CPU."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.global_layers else 2),
+        d_model=64,
+        vocab_size=512,
+        tp_size=1,
+        remat="none",
+        dtype="float32",
+    )
+    if cfg.has_attention:
+        kw.update(n_heads=4, n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4, head_dim=16)
+    if cfg.d_ff:
+        kw.update(d_ff=128)
+    if cfg.n_experts:
+        kw.update(n_experts=4, experts_per_token=2, capacity_factor=2.0)
+    if cfg.has_ssm:
+        kw.update(ssm_state=8)
+    if cfg.sliding_window is not None:
+        kw.update(sliding_window=32)
+    if cfg.global_layers:
+        kw.update(global_layers=(0, 3))
+    if cfg.n_meta_tokens:
+        kw.update(n_meta_tokens=8)
+    if cfg.frontend_tokens:
+        kw.update(frontend_tokens=16)
+    if cfg.dt_rank:
+        kw.update(dt_rank=8)
+    return cfg.replace(**kw)

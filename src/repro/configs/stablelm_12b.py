@@ -1,0 +1,21 @@
+"""StableLM-2 12B — dense GQA decoder with partial rotary embeddings (25%).
+[hf:stabilityai/stablelm-2-1_6b family per assignment; hf]"""
+
+from repro.models.common import ModelConfig
+from repro.models.zoo import register
+
+CONFIG = register(ModelConfig(
+    arch_id="stablelm-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    head_dim=160,
+    rotary_pct=0.25,
+    rope_theta=10_000.0,
+    norm_eps=1e-5,
+    tp_size=16,
+))

@@ -1,0 +1,38 @@
+"""Core library: the paper's nested partitioning scheme, generalized.
+
+- morton:       space-filling-curve ordering (level-1 locality)
+- partition:    two-level nested partition with boundary/interior split
+- cost_model:   calibrated T(N, K) runtime models (paper section 5.6)
+- load_balance: equalization solvers, offline and online (stragglers)
+- topology:     device/link classes (Stampede node, TPU v5e pods)
+- collectives:  hierarchy-aware (slow-link-minimizing, compressed) psums
+- overlap:      boundary/interior overlapped collective-matmul primitives
+"""
+
+from repro.core.load_balance import SplitResult, rebalance_from_measurements, solve_multiway, solve_two_way
+from repro.core.morton import morton_order, morton_order_coords
+from repro.core.partition import (
+    NestedPartition,
+    NodePartition,
+    build_nested_partition,
+    face_neighbors,
+    hierarchical_splice,
+    splice,
+    surface_faces,
+)
+
+__all__ = [
+    "SplitResult",
+    "solve_two_way",
+    "solve_multiway",
+    "rebalance_from_measurements",
+    "morton_order",
+    "morton_order_coords",
+    "NestedPartition",
+    "NodePartition",
+    "build_nested_partition",
+    "face_neighbors",
+    "hierarchical_splice",
+    "splice",
+    "surface_faces",
+]

@@ -1,0 +1,175 @@
+"""Heterogeneous load balancing — the paper's equalization solve (section 5.6).
+
+Computation on the accelerator is asynchronous w.r.t. the host, so the
+balance is optimal when both sides finish together:
+
+    T_acc(K_acc) = T_host(K - K_acc) + Transfer(K_acc)
+    K = K_acc + K_host
+
+(the paper charges the PCI transfer to the CPU side).  We solve this by
+integer bisection on the monotone residual, generalize it to n-way
+heterogeneous partitions (common-finish-time waterfilling), and provide the
+online re-solve used for straggler mitigation: the same equalizer re-fed
+with *measured* per-partition step times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "SplitResult",
+    "solve_two_way",
+    "solve_multiway",
+    "rebalance_from_measurements",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitResult:
+    counts: tuple  # work items per partition
+    times: tuple  # predicted completion time per partition
+    ratio: float  # counts[accel] / counts[host] for two-way splits
+
+    @property
+    def makespan(self) -> float:
+        return max(self.times)
+
+    @property
+    def imbalance(self) -> float:
+        """makespan / mean — 1.0 is perfect."""
+        m = float(np.mean(self.times)) if max(self.times) > 0 else 1.0
+        return self.makespan / m if m > 0 else 1.0
+
+
+def solve_two_way(
+    t_host: Callable[[float], float],
+    t_accel: Callable[[float], float],
+    K: int,
+    transfer: Optional[Callable[[float], float]] = None,
+    K_accel_max: Optional[int] = None,
+) -> SplitResult:
+    """Solve T_accel(Ka) = T_host(K-Ka) + Transfer(Ka) for integer Ka.
+
+    ``K_accel_max`` caps the offload (the paper only offloads *interior*
+    elements; pass the interior count).  Residual f(Ka) = T_acc - T_host_side
+    is nondecreasing in Ka, so bisection applies.
+    """
+    transfer = transfer or (lambda k: 0.0)
+    hi = K if K_accel_max is None else min(K, int(K_accel_max))
+    lo = 0
+
+    def host_side(ka: int) -> float:
+        return t_host(K - ka) + transfer(ka)
+
+    def resid(ka: int) -> float:
+        return t_accel(ka) - host_side(ka)
+
+    if resid(hi) <= 0:
+        ka = hi  # accelerator never becomes the bottleneck: offload the cap
+    elif resid(lo) >= 0:
+        ka = lo
+    else:
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if resid(mid) <= 0:
+                lo = mid
+            else:
+                hi = mid
+        # pick the neighbour with the better makespan
+        mk = lambda k: max(t_accel(k), host_side(k))
+        ka = lo if mk(lo) <= mk(hi) else hi
+
+    kh = K - ka
+    times = (host_side(ka), t_accel(ka))
+    ratio = float("inf") if kh == 0 else ka / kh
+    return SplitResult(counts=(kh, ka), times=times, ratio=ratio)
+
+
+def solve_multiway(
+    time_fns: Sequence[Callable[[float], float]],
+    K: int,
+    integer: bool = True,
+) -> SplitResult:
+    """Equalize completion time across n partitions.
+
+    Waterfilling: find common finish time T s.t. sum_i K_i(T) = K, where
+    K_i(T) = max work partition i finishes within T (inverse of t_i, found
+    by inner bisection since each t_i is nondecreasing).
+    """
+    n = len(time_fns)
+    if n == 0:
+        raise ValueError("need at least one partition")
+
+    def k_of_t(t_fn: Callable[[float], float], T: float) -> float:
+        if t_fn(0) > T:
+            return 0.0
+        lo, hi = 0.0, 1.0
+        while t_fn(hi) <= T and hi < 1e15:
+            hi *= 2
+        for _ in range(80):
+            mid = 0.5 * (lo + hi)
+            if t_fn(mid) <= T:
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+    # outer bisection on T
+    T_hi = max(t_fn(K) for t_fn in time_fns) + 1e-12
+    T_lo = 0.0
+    for _ in range(80):
+        T_mid = 0.5 * (T_lo + T_hi)
+        total = sum(k_of_t(f, T_mid) for f in time_fns)
+        if total >= K:
+            T_hi = T_mid
+        else:
+            T_lo = T_mid
+    ks = np.array([k_of_t(f, T_hi) for f in time_fns])
+    if ks.sum() <= 0:
+        ks = np.ones(n)
+    if integer:
+        ideal = K * ks / ks.sum()
+        counts = np.floor(ideal).astype(int)
+        rem = K - counts.sum()
+        order = np.argsort(-(ideal - counts))
+        counts[order[:rem]] += 1
+    else:
+        counts = K * ks / ks.sum()
+    times = tuple(float(time_fns[i](counts[i])) for i in range(n))
+    ratio = counts[1] / counts[0] if n == 2 and counts[0] > 0 else float("nan")
+    return SplitResult(counts=tuple(int(c) if integer else float(c) for c in counts), times=times, ratio=ratio)
+
+
+def rebalance_from_measurements(
+    current_counts: Sequence[int],
+    measured_times: Sequence[float],
+    smoothing: float = 0.5,
+    prev_weights: Optional[Sequence[float]] = None,
+) -> np.ndarray:
+    """Online re-balance (straggler mitigation).
+
+    Estimate per-partition throughput from the *measured* last-step times and
+    return new work weights that equalize predicted times.  ``smoothing``
+    blends with previous weights (EWMA) so one noisy step cannot thrash the
+    partition.  This is the paper's equalizer run online: a straggling node
+    (slow device, contended network) simply looks like a device class with a
+    lower calibrated throughput.
+    """
+    counts = np.asarray(current_counts, dtype=np.float64)
+    times = np.asarray(measured_times, dtype=np.float64)
+    if (times <= 0).any():
+        raise ValueError("measured times must be positive")
+    throughput = counts / times  # items / s
+    if (throughput <= 0).any():
+        # a partition with zero work: give it the mean throughput as a prior
+        throughput = np.where(throughput > 0, throughput, throughput[throughput > 0].mean())
+    new_w = throughput / throughput.sum()
+    if prev_weights is not None:
+        prev = np.asarray(prev_weights, dtype=np.float64)
+        prev = prev / prev.sum()
+        new_w = smoothing * new_w + (1.0 - smoothing) * prev
+    return new_w / new_w.sum()

@@ -1,0 +1,133 @@
+"""Boundary/interior overlap primitives — the paper's level-2 idea on TPU.
+
+The paper hides the slow intra-node link by computing *interior* elements
+while *boundary* faces are in flight, synchronizing once per step.  On TPU
+the same dependency structure is expressed by decomposing a collective +
+matmul into a ring of (local matmul on the chunk you hold) || (ppermute of
+the next chunk): XLA's latency-hiding scheduler overlaps the DMA with MXU
+work because the two have no data dependence — exactly "interior compute
+over boundary communication".
+
+These run inside ``jax.shard_map``.  ``ring_allgather_matmul`` replaces
+``all_gather -> matmul`` (activation gathering for column-parallel layers);
+``matmul_ring_reducescatter`` replaces ``matmul -> reduce_scatter``
+(row-parallel layers).  Both are exact (tested against the fused forms).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _perm_shift(axis_size: int, shift: int = 1):
+    return [(i, (i + shift) % axis_size) for i in range(axis_size)]
+
+
+def ring_allgather_matmul(
+    x_shard: jnp.ndarray,
+    w: jnp.ndarray,
+    axis_name: str,
+    reverse: bool = False,
+) -> jnp.ndarray:
+    """Compute ``all_gather(x_shard, axis) @ w`` without materializing the
+    gather ahead of the matmul.
+
+    x_shard: (m_local, k) — this member's chunk of the gathered dimension.
+    w:       (k, n)       — local (already sharded on n outside, if at all).
+    Returns (m_local * P, n), identical to the fused form.
+
+    Each ring step multiplies the chunk currently held (interior work) while
+    the next chunk is in flight via ppermute (boundary exchange).
+    """
+    P = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    m_local, _ = x_shard.shape
+    n = w.shape[1]
+    shift = -1 if reverse else 1
+    perm = _perm_shift(P, shift)
+
+    out = jnp.zeros((m_local * P, n), dtype=jnp.result_type(x_shard.dtype, w.dtype))
+
+    def body(i, carry):
+        out, chunk = carry
+        src = (idx - i * shift) % P  # owner of the chunk we currently hold
+        part = chunk @ w  # interior compute
+        out = lax.dynamic_update_slice(out, part.astype(out.dtype), (src * m_local, 0))
+        chunk = lax.ppermute(chunk, axis_name, perm)  # boundary exchange
+        return out, chunk
+
+    out, last = lax.fori_loop(0, P - 1, body, (out, x_shard))
+    # last chunk: no further permute needed
+    src = (idx - (P - 1) * shift) % P
+    out = lax.dynamic_update_slice(out, (last @ w).astype(out.dtype), (src * m_local, 0))
+    return out
+
+
+def matmul_ring_reducescatter(
+    x: jnp.ndarray,
+    w_shard: jnp.ndarray,
+    axis_name: str,
+) -> jnp.ndarray:
+    """Compute ``reduce_scatter(x @ w, axis, dim=0)`` chunk-by-chunk.
+
+    x:       (m, k_local)  — activations, sharded on the contraction dim.
+    w_shard: (k_local, n)  — weights, sharded on the contraction dim.
+    Returns (m / P, n): this member's scattered shard of the summed product.
+
+    Ring accumulation: at each step, add your partial product for the chunk
+    you are about to pass on (interior), then rotate the accumulator
+    (boundary).  Requires m % P == 0.
+    """
+    P = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    m = x.shape[0]
+    if m % P:
+        raise ValueError(f"rows {m} not divisible by axis size {P}")
+    mc = m // P
+    perm = _perm_shift(P, 1)
+
+    def partial_for(slot: jnp.ndarray) -> jnp.ndarray:
+        xs = lax.dynamic_slice(x, (slot * mc, 0), (mc, x.shape[1]))
+        return xs @ w_shard
+
+    def body(i, acc):
+        # chunk destined for member (idx + P - 1 - i): compute local partial,
+        # add to the rotating accumulator, pass it along the ring.
+        slot = (idx + (P - 1) - i) % P
+        acc = acc + partial_for(slot)
+        acc = lax.ppermute(acc, axis_name, perm)
+        return acc
+
+    acc = jnp.zeros((mc, w_shard.shape[1]), dtype=jnp.result_type(x.dtype, w_shard.dtype))
+    acc = lax.fori_loop(0, P - 1, body, acc)
+    acc = acc + partial_for(idx)
+    return acc
+
+
+def halo_exchange_1d(
+    edge_lo: jnp.ndarray,
+    edge_hi: jnp.ndarray,
+    axis_name: str,
+    wrap: bool = False,
+):
+    """Exchange 1-D halos with ring neighbours (the DG face exchange and the
+    SSM chunk-state handoff both reduce to this).
+
+    Sends ``edge_hi`` to the next member and ``edge_lo`` to the previous one;
+    returns (recv_from_prev, recv_from_next).  With ``wrap=False`` the ends
+    receive zeros (physical boundary).
+    """
+    P = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    fwd = _perm_shift(P, 1) if wrap else [(i, i + 1) for i in range(P - 1)]
+    bwd = _perm_shift(P, -1) if wrap else [(i + 1, i) for i in range(P - 1)]
+    from_prev = lax.ppermute(edge_hi, axis_name, fwd)
+    from_next = lax.ppermute(edge_lo, axis_name, bwd)
+    if not wrap:
+        from_prev = jnp.where(idx == 0, jnp.zeros_like(from_prev), from_prev)
+        from_next = jnp.where(idx == P - 1, jnp.zeros_like(from_next), from_next)
+    return from_prev, from_next

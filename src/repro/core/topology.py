@@ -1,0 +1,190 @@
+"""Hardware topology descriptions and roofline constants.
+
+The paper calibrates per-device-class runtime models for a heterogeneous
+node (Sandy Bridge CPU socket + Xeon Phi coprocessor, joined by a PCI bus).
+We keep the same abstraction — a ``DeviceClass`` with peak compute, memory
+bandwidth and an attached ``LinkClass`` — and instantiate it both for the
+paper's Stampede node (used to validate the load-balance solver against the
+published ``K_MIC/K_CPU = 1.6`` optimum) and for the TPU v5e pod hierarchy
+that this framework targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Generic device/link classes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkClass:
+    """A communication link with a simple latency/bandwidth (alpha-beta) model."""
+
+    name: str
+    bandwidth: float  # bytes / second, per direction
+    latency: float = 0.0  # seconds per message
+
+    def time(self, nbytes: float, n_messages: int = 1) -> float:
+        return self.latency * n_messages + nbytes / self.bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceClass:
+    """A compute device with roofline constants.
+
+    ``efficiency`` scales peak FLOP/s to a *sustained* value for real kernels;
+    the paper's T_CPU/T_MIC tables are measured, which is equivalent to
+    carrying per-kernel efficiency factors.  ``mem_efficiency`` does the same
+    for bandwidth.
+    """
+
+    name: str
+    peak_flops: float  # FLOP/s (double for Stampede, bf16 for TPU)
+    hbm_bandwidth: float  # bytes / s
+    memory_bytes: float  # capacity
+    efficiency: float = 1.0
+    mem_efficiency: float = 1.0
+
+    @property
+    def sustained_flops(self) -> float:
+        return self.peak_flops * self.efficiency
+
+    @property
+    def sustained_bandwidth(self) -> float:
+        return self.hbm_bandwidth * self.mem_efficiency
+
+    def time_roofline(self, flops: float, bytes_moved: float) -> float:
+        """Roofline execution-time estimate: max of compute and memory terms."""
+        t_compute = flops / self.sustained_flops
+        t_memory = bytes_moved / self.sustained_bandwidth
+        return max(t_compute, t_memory)
+
+
+# ---------------------------------------------------------------------------
+# The paper's machine: one Stampede compute node (section 5.2)
+# ---------------------------------------------------------------------------
+# Per the paper: one SNB socket = 8 cores * 2.7 GHz * 8 DP flops/cycle
+# = 172.8 GFLOP/s, 51.2 GB/s (4 channels @ 1600 MT/s); the MIC = 61 cores
+# @ 1.1 GHz * 16 DP flops/cycle ~= 1.0 TFLOP/s, 320 GB/s, 8 GB RAM.
+#
+# The published tables T_CPU / T_MIC are not in the paper; the *observed*
+# optimum K_MIC/K_CPU = 1.6 implies a sustained-throughput ratio of ~1.6
+# (MIC efficiency on this DG code was far below peak, as was typical).  We
+# encode efficiencies consistent with the published optimum and the 6.3x
+# single-node speedup, and validate the solver against them in tests; the
+# sensitivity of the split to these factors is swept in
+# benchmarks/fig5_2_load_fraction.py.
+
+STAMPEDE_SNB_SOCKET = DeviceClass(
+    name="snb-socket",
+    peak_flops=172.8e9,
+    hbm_bandwidth=51.2e9,
+    memory_bytes=32e9,
+    efficiency=0.65,
+    mem_efficiency=0.80,
+)
+
+STAMPEDE_MIC = DeviceClass(
+    name="xeon-phi",
+    peak_flops=1.0e12,
+    hbm_bandwidth=320e9,
+    memory_bytes=8e9,
+    efficiency=0.18,
+    mem_efficiency=0.55,
+)
+
+# PCI bus between host and MIC; Fig 5.3 shows ~1-6 GB/s with high variance
+# and a visible per-message latency floor.
+STAMPEDE_PCI = LinkClass(name="pci", bandwidth=6.0e9, latency=15e-6)
+
+# InfiniBand FDR between nodes.
+STAMPEDE_IB = LinkClass(name="infiniband", bandwidth=6.8e9, latency=1.5e-6)
+
+
+# ---------------------------------------------------------------------------
+# Target machine: TPU v5e pods (roofline constants fixed by the assignment)
+# ---------------------------------------------------------------------------
+
+TPU_V5E = DeviceClass(
+    name="tpu-v5e",
+    peak_flops=197e12,  # bf16
+    hbm_bandwidth=819e9,
+    memory_bytes=16e9,
+)
+
+# Per-link ICI bandwidth (one direction).  A v5e chip in a 2D torus has
+# multiple links; collective-bytes rooflines in this repo charge the
+# per-chip aggregate as n_links * ICI_LINK.bandwidth where relevant, but the
+# §Roofline collective term uses the assignment's convention:
+# collective_bytes / (chips * link_bw).
+ICI_LINK = LinkClass(name="ici", bandwidth=50e9, latency=1e-6)
+
+# Data-centre network between pods: the slow link (the PCI-bus analogue in
+# the nested-partition mapping).  ~25 GB/s per host (8 chips) is a
+# representative planning number => ~3 GB/s per chip.
+DCN_LINK = LinkClass(name="dcn", bandwidth=3.125e9, latency=10e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTopology:
+    """A nested cluster: groups of devices joined by a slow link.
+
+    This generalizes the paper's node = (CPU + MIC over PCI) to
+    fleet = (pods over DCN), pod = (chips over ICI).
+    """
+
+    name: str
+    device: DeviceClass
+    devices_per_group: int
+    n_groups: int
+    fast_link: LinkClass
+    slow_link: LinkClass
+    # Optional heterogeneity: per-group device class override.
+    group_devices: Optional[tuple] = None
+
+    @property
+    def n_devices(self) -> int:
+        return self.devices_per_group * self.n_groups
+
+    def device_for_group(self, g: int) -> DeviceClass:
+        if self.group_devices is not None:
+            return self.group_devices[g]
+        return self.device
+
+
+def single_pod_v5e(n_chips: int = 256) -> ClusterTopology:
+    return ClusterTopology(
+        name=f"v5e-{n_chips}",
+        device=TPU_V5E,
+        devices_per_group=n_chips,
+        n_groups=1,
+        fast_link=ICI_LINK,
+        slow_link=DCN_LINK,
+    )
+
+
+def multi_pod_v5e(n_pods: int = 2, chips_per_pod: int = 256) -> ClusterTopology:
+    return ClusterTopology(
+        name=f"v5e-{n_pods}x{chips_per_pod}",
+        device=TPU_V5E,
+        devices_per_group=chips_per_pod,
+        n_groups=n_pods,
+        fast_link=ICI_LINK,
+        slow_link=DCN_LINK,
+    )
+
+
+def stampede_node() -> ClusterTopology:
+    """The paper's heterogeneous node: CPU socket + MIC over PCI."""
+    return ClusterTopology(
+        name="stampede-node",
+        device=STAMPEDE_SNB_SOCKET,
+        devices_per_group=1,
+        n_groups=2,
+        fast_link=STAMPEDE_PCI,
+        slow_link=STAMPEDE_IB,
+        group_devices=(STAMPEDE_SNB_SOCKET, STAMPEDE_MIC),
+    )

@@ -1,0 +1,7 @@
+"""DGSEM coupled elastic-acoustic wave solver — the paper's evaluation
+problem (sections 2-3): strain-velocity formulation, exact Riemann flux
+(Wilcox et al.), LGL collocation on affine hexahedra, LSRK4(5) stepping,
+nested-partition execution (section 5)."""
+
+from repro.dg.basis import lgl_nodes_weights, diff_matrix
+from repro.dg.solver import DGSolver

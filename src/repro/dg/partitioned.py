@@ -1,0 +1,206 @@
+"""Nested-partition execution of the DG solver (paper section 5).
+
+Level 1 — inter-node: elements are split into contiguous x-slabs, one per
+device along the ``data`` mesh axis (Morton-ordered within the slab); the
+once-per-stage face exchange between slabs is a ring ``ppermute``
+(`halo_exchange_1d`).
+
+Level 2 — intra-node boundary/interior: the rhs is *structured* so that the
+slab-edge (boundary) face data is extracted and launched into the ring
+FIRST, then the volume kernel + intra-slab fluxes (interior work, no
+dependence on the halo) are computed, and finally the halo corrections are
+added.  XLA's scheduler overlaps the ppermute DMA with the interior
+compute — the paper's Fig 5.1 expressed as dataflow.
+
+Correctness invariant (tested): the partitioned rhs/run equals the flat
+single-array solver bitwise up to float reassociation — the partition is a
+reordering, never an approximation.
+
+The heterogeneous (CPU+MIC) level-2 split with calibrated asymmetric sizes
+is exercised by `repro.core.load_balance` + `benchmarks/table6_1_speedup.py`
+on the cost models; this module is the homogeneous-SPMD incarnation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.overlap import halo_exchange_1d
+from repro.dg.mesh import BrickMesh
+from repro.dg.operators import (
+    OPPOSITE,
+    extract_face,
+    riemann_correction,
+    stress,
+    surface_rhs,
+    volume_rhs,
+)
+from repro.dg.rk import lsrk45_step
+from repro.dg.solver import DGSolver
+
+
+def slab_neighbors(grid, n_slabs: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(order, neighbors_local): elements reordered x-major so each slab is
+    contiguous; intra-slab neighbor ids are slab-local; faces crossing slab
+    boundaries point at the element ITSELF (-> zero jump -> zero intra
+    correction; the halo pass adds the real correction)."""
+    nx, ny, nz = grid
+    if nx % n_slabs:
+        raise ValueError(f"nx={nx} not divisible by {n_slabs} slabs")
+    from repro.core.partition import face_neighbors
+
+    K = nx * ny * nz
+    nbr = face_neighbors(grid)
+    # x-major order: elements sorted by (ix, iy, iz); id = ix + nx*(iy+ny*iz)
+    ix = np.arange(K) % nx
+    iy = (np.arange(K) // nx) % ny
+    iz = np.arange(K) // (nx * ny)
+    order = np.lexsort((iz, iy, ix))  # primary key ix
+    inv = np.empty(K, np.int64)
+    inv[order] = np.arange(K)
+    per = nx // n_slabs * ny * nz
+    nbr_new = np.full((K, 6), -1, np.int64)
+    for f in range(6):
+        src = nbr[order, f]
+        valid = src >= 0
+        mapped = np.where(valid, inv[np.clip(src, 0, None)], -1)
+        # faces that cross a slab boundary: -2 (the halo pass adds them)
+        same_slab = (mapped // per) == (np.arange(K) // per)
+        nbr_new[:, f] = np.where(valid & same_slab, mapped, np.where(valid, -2, -1))
+    # local ids within slab (sentinels -1 physical, -2 cross-slab preserved)
+    nbr_local = np.where(nbr_new >= 0, nbr_new % per, nbr_new)
+    return order, nbr_local
+
+
+@dataclasses.dataclass
+class PartitionedDG:
+    """shard_map slab execution of a DGSolver."""
+
+    solver: DGSolver
+    mesh_axes: Mesh
+    axis: str = "data"
+
+    def __post_init__(self):
+        s = self.solver
+        self.P = self.mesh_axes.shape[self.axis]
+        nx, ny, nz = s.mesh.grid
+        self.order_perm, nbr_local = slab_neighbors(s.mesh.grid, self.P)
+        self.K_loc = s.mesh.K // self.P
+        self.layer = ny * nz  # elements per x-layer
+        self.nbr_local = jnp.asarray(nbr_local)
+        p = self.order_perm
+        self.rho = jnp.asarray(s.rho[p])
+        self.lam = jnp.asarray(s.lam[p])
+        self.mu = jnp.asarray(s.mu[p])
+        self.cp = jnp.sqrt((self.lam + 2 * self.mu) / self.rho)
+        self.cs = jnp.sqrt(self.mu / self.rho)
+        self.spec_q = P(self.axis, None, None, None, None)
+        self.spec_e = P(self.axis)
+
+    # ------------------------------------------------------------------
+    def permute_in(self, q_flat: jnp.ndarray) -> jnp.ndarray:
+        return q_flat[self.order_perm]
+
+    def permute_out(self, q_part: jnp.ndarray) -> jnp.ndarray:
+        inv = np.empty_like(self.order_perm)
+        inv[self.order_perm] = np.arange(len(self.order_perm))
+        return q_part[inv]
+
+    # ------------------------------------------------------------------
+    def _rhs_local(self, q, nbr, rho, lam, mu, cp, cs):
+        """Per-device rhs with ring halo exchange; runs inside shard_map."""
+        s = self.solver
+        L = self.layer
+        S = stress(q, lam, mu)
+
+        # ---- boundary work first: extract slab-edge faces, launch the ring
+        lo_S = extract_face(S[:L], 0)  # -x faces of first layer
+        lo_v = extract_face(q[:L, 6:9], 0)
+        hi_S = extract_face(S[-L:], 1)  # +x faces of last layer
+        hi_v = extract_face(q[-L:, 6:9], 1)
+        lo_mat = jnp.stack([rho[:L], cp[:L], cs[:L], mu[:L]])
+        hi_mat = jnp.stack([rho[-L:], cp[-L:], cs[-L:], mu[-L:]])
+        send_lo = jnp.concatenate([lo_S.reshape(L, -1), lo_v.reshape(L, -1),
+                                   lo_mat.T], axis=1)
+        send_hi = jnp.concatenate([hi_S.reshape(L, -1), hi_v.reshape(L, -1),
+                                   hi_mat.T], axis=1)
+        from_prev, from_next = halo_exchange_1d(send_lo, send_hi, self.axis)
+
+        # ---- interior work: volume + intra-slab fluxes (independent of halo)
+        out = volume_rhs(q, s.D, s.metrics, rho, lam, mu)
+        out = out + surface_rhs(q, nbr, s.lift, rho, lam, mu, cp, cs)
+
+        # ---- boundary corrections from the halo
+        idx = jax.lax.axis_index(self.axis)
+        M = s.M
+        nface = 6 * M * M
+
+        def unpack(buf):
+            Sf = buf[:, : nface].reshape(L, 6, M, M)
+            vf = buf[:, nface : nface + 3 * M * M].reshape(L, 3, M, M)
+            mat = buf[:, nface + 3 * M * M :]
+            return Sf, vf, {"rho": mat[:, 0], "cp": mat[:, 1], "cs": mat[:, 2], "mu": mat[:, 3]}
+
+        # -x faces of the first layer (neighbor = prev device's last layer)
+        Sp, vp, mp = unpack(from_prev)
+        Sm_lo = lo_S
+        vm_lo = lo_v
+        mm_lo = {"rho": rho[:L], "cp": cp[:L], "cs": cs[:L], "mu": mu[:L]}
+        # the global -x boundary (device 0) is already mirrored by the intra
+        # pass (nbr == -1): zero the halo correction there
+        is_global_lo = idx == 0
+        mp = {k: jnp.where(is_global_lo, mm_lo[k], v) for k, v in mp.items()}
+        FE, Fv = riemann_correction(Sm_lo, vm_lo, Sp, vp, 0, -1.0, mm_lo, mp)
+        corr = jnp.concatenate([FE, Fv / rho[:L, None, None, None]], axis=1)
+        corr = jnp.where(is_global_lo, 0.0, corr)
+        out = out.at[:L, :, 0, :, :].add(-s.lift[0] * corr)
+
+        # +x faces of the last layer (neighbor = next device's first layer)
+        Sp, vp, mp = unpack(from_next)
+        Sm_hi = hi_S
+        vm_hi = hi_v
+        mm_hi = {"rho": rho[-L:], "cp": cp[-L:], "cs": cs[-L:], "mu": mu[-L:]}
+        is_global_hi = idx == self.P - 1
+        mp = {k: jnp.where(is_global_hi, mm_hi[k], v) for k, v in mp.items()}
+        FE, Fv = riemann_correction(Sm_hi, vm_hi, Sp, vp, 0, +1.0, mm_hi, mp)
+        corr = jnp.concatenate([FE, Fv / rho[-L:, None, None, None]], axis=1)
+        corr = jnp.where(is_global_hi, 0.0, corr)
+        out = out.at[-L:, :, s.M - 1, :, :].add(-s.lift[0] * corr)
+        return out
+
+    # ------------------------------------------------------------------
+    def rhs(self, q_part: jnp.ndarray) -> jnp.ndarray:
+        """Global-view rhs on the permuted state (sharded over the axis)."""
+        f = jax.shard_map(
+            self._rhs_local,
+            mesh=self.mesh_axes,
+            in_specs=(self.spec_q, P(self.axis, None), self.spec_e, self.spec_e,
+                      self.spec_e, self.spec_e, self.spec_e),
+            out_specs=self.spec_q,
+            check_vma=False,
+        )
+        return f(q_part, self.nbr_local, self.rho, self.lam, self.mu, self.cp, self.cs)
+
+    def run(self, q_part: jnp.ndarray, n_steps: int, dt: Optional[float] = None) -> jnp.ndarray:
+        dt = dt or self.solver.cfl_dt()
+        res = jnp.zeros_like(q_part)
+
+        @jax.jit
+        def many(q, res):
+            def body(carry, _):
+                q, res = carry
+                q, res = lsrk45_step(q, res, self.rhs, dt)
+                return (q, res), None
+
+            (q, res), _ = jax.lax.scan(body, (q, res), None, length=n_steps)
+            return q, res
+
+        q_part, _ = many(q_part, res)
+        return q_part

@@ -1,0 +1,35 @@
+"""Low-storage RK4(5) (Carpenter & Kennedy) — the paper's rk kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+
+LSRK_A = np.array([
+    0.0,
+    -567301805773.0 / 1357537059087.0,
+    -2404267990393.0 / 2016746695238.0,
+    -3550918686646.0 / 2091501179385.0,
+    -1275806237668.0 / 842570457699.0,
+])
+LSRK_B = np.array([
+    1432997174477.0 / 9575080441755.0,
+    5161836677717.0 / 13612068292357.0,
+    1720146321549.0 / 2090206949498.0,
+    3134564353537.0 / 4481467310338.0,
+    2277821191437.0 / 14882151754819.0,
+])
+LSRK_C = np.array([
+    0.0,
+    1432997174477.0 / 9575080441755.0,
+    2526269341429.0 / 6820363962896.0,
+    2006345519317.0 / 3224310063776.0,
+    2802321613138.0 / 2924317926251.0,
+])
+
+
+def lsrk45_step(q, res, rhs_fn, dt):
+    """One LSRK4(5) step. res is the low-storage register (same shape as q)."""
+    for s in range(5):
+        res = LSRK_A[s] * res + dt * rhs_fn(q)
+        q = q + LSRK_B[s] * res
+    return q, res

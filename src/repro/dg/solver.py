@@ -1,0 +1,140 @@
+"""Assembled DGSEM solver on a brick mesh (flat, single-array execution).
+
+The nested-partition execution of the same rhs lives in
+``repro/dg/partitioned.py``; both produce identical fields (tested) — the
+paper's partition is a reordering, never an approximation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dg.basis import diff_matrix, lgl_nodes_weights
+from repro.dg.mesh import BrickMesh, make_brick, two_tree_materials
+from repro.dg.operators import dg_rhs, stress
+from repro.dg.rk import lsrk45_step
+
+
+@dataclasses.dataclass
+class DGSolver:
+    mesh: BrickMesh
+    order: int
+    rho: np.ndarray
+    lam: np.ndarray
+    mu: np.ndarray
+    dtype: str = "float64"
+    kernel_impl: str = "xla"  # xla | interpret | pallas (TPU)
+
+    def __post_init__(self):
+        x, w = lgl_nodes_weights(self.order)
+        self.nodes, self.weights = x, w
+        dt = jnp.dtype(self.dtype)
+        self.D = jnp.asarray(diff_matrix(x), dt)
+        self.metrics = tuple(self.mesh.metric(a) for a in range(3))
+        self.lift = tuple(self.mesh.metric(a) / w[0] for a in range(3))
+        self.neighbors = jnp.asarray(self.mesh.neighbors)
+        self.rho_j = jnp.asarray(self.rho, dt)
+        self.lam_j = jnp.asarray(self.lam, dt)
+        self.mu_j = jnp.asarray(self.mu, dt)
+        self.cp_j = jnp.sqrt((self.lam_j + 2 * self.mu_j) / self.rho_j)
+        self.cs_j = jnp.sqrt(self.mu_j / self.rho_j)
+
+    @property
+    def M(self) -> int:
+        return self.order + 1
+
+    # ------------------------------------------------------------------
+    def node_coords(self) -> np.ndarray:
+        """Physical coordinates of all nodes: (K, M, M, M, 3)."""
+        K = self.mesh.K
+        M = self.M
+        r = (self.nodes + 1) / 2  # [0,1]
+        h = self.mesh.h
+        c = self.mesh.centers
+        out = np.zeros((K, M, M, M, 3))
+        for a in range(3):
+            shape = [1, 1, 1]
+            shape[a] = M
+            coord = c[:, a][:, None, None, None] + (r.reshape(shape) - 0.5) * h[a]
+            out[..., a] = np.broadcast_to(coord, (K, M, M, M))
+        return out
+
+    def zero_state(self) -> jnp.ndarray:
+        return jnp.zeros((self.mesh.K, 9, self.M, self.M, self.M), jnp.dtype(self.dtype))
+
+    def rhs(self, q: jnp.ndarray) -> jnp.ndarray:
+        return dg_rhs(
+            q, self.D, self.metrics, self.lift, self.neighbors,
+            self.rho_j, self.lam_j, self.mu_j, self.cp_j, self.cs_j,
+            kernel_impl=self.kernel_impl,
+        )
+
+    def cfl_dt(self, cfl: float = 0.3) -> float:
+        cp_max = float(np.sqrt((self.lam + 2 * self.mu) / self.rho).max())
+        h_min = min(self.mesh.h)
+        return cfl * h_min / (cp_max * self.order**2)
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, q, res, dt):
+        return lsrk45_step(q, res, self.rhs, dt)
+
+    def run(self, q, n_steps: int, dt: Optional[float] = None):
+        dt = dt or self.cfl_dt()
+        res = jnp.zeros_like(q)
+
+        @jax.jit
+        def many(q, res):
+            def body(carry, _):
+                q, res = carry
+                q, res = lsrk45_step(q, res, self.rhs, dt)
+                return (q, res), None
+
+            (q, res), _ = jax.lax.scan(body, (q, res), None, length=n_steps)
+            return q, res
+
+        q, _ = many(q, res)
+        return q
+
+    # ------------------------------------------------------------------
+    def energy(self, q: jnp.ndarray) -> float:
+        """0.5 * int rho|v|^2 + E:C:E  (quadrature-weighted)."""
+        w = self.weights
+        W = jnp.asarray(np.einsum("i,j,k->ijk", w, w, w), q.dtype) * self.mesh.jacobian
+        v = q[:, 6:9]
+        kin = 0.5 * self.rho_j[:, None, None, None] * jnp.sum(v**2, axis=1)
+        S = stress(q, self.lam_j, self.mu_j)
+        E = q[:, :6]
+        # E:S with symmetric off-diagonal double counting
+        es = (
+            E[:, 0] * S[:, 0] + E[:, 1] * S[:, 1] + E[:, 2] * S[:, 2]
+            + 2 * (E[:, 3] * S[:, 3] + E[:, 4] * S[:, 4] + E[:, 5] * S[:, 5])
+        )
+        pot = 0.5 * es
+        return float(jnp.sum((kin + pot) * W[None]))
+
+
+def make_two_tree_solver(grid=(8, 4, 4), order: int = 3, extent=(2.0, 1.0, 1.0),
+                         cp=(1.0, 3.0), cs=(0.0, 2.0), rho=(1.0, 1.0), dtype="float64",
+                         kernel_impl="xla") -> DGSolver:
+    """The paper's Fig 6.1 setup (scaled down by default)."""
+    mesh = make_brick(grid, extent)
+    rho_e, lam, mu, _ = two_tree_materials(mesh, cp, cs, rho)
+    return DGSolver(mesh=mesh, order=order, rho=rho_e, lam=lam, mu=mu, dtype=dtype,
+                    kernel_impl=kernel_impl)
+
+
+def gaussian_pulse(solver: DGSolver, center=(0.5, 0.5, 0.5), width: float = 0.08,
+                   component: int = 6) -> jnp.ndarray:
+    """v or E component initialized with a Gaussian — standard smoke IC."""
+    xyz = solver.node_coords()
+    r2 = sum((xyz[..., a] - center[a]) ** 2 for a in range(3))
+    blob = np.exp(-r2 / (2 * width**2))
+    q = np.zeros((solver.mesh.K, 9, solver.M, solver.M, solver.M))
+    q[:, component] = blob
+    return jnp.asarray(q, jnp.dtype(solver.dtype))

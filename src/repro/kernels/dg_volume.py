@@ -1,0 +1,143 @@
+"""Pallas TPU kernel for the paper's ``volume_loop`` hot-spot.
+
+The paper hand-vectorizes the elemental tensor-product applications
+(IIAX/IAIX/AIIX) with AVX/MIC intrinsics.  The TPU adaptation rethinks the
+layout for the MXU instead of porting the vector code:
+
+  * an (M x M) derivative matrix (M = order+1 = 8) used alone occupies
+    8/128 of the MXU's contraction dim (~6% utilization);
+  * we therefore process BE = 16 elements per grid step and apply the
+    BLOCK-DIAGONAL operator D16 = kron(I_16, D) (128 x 128) — the r1
+    derivative of 16 elements becomes ONE full-width MXU pass, with the
+    9 fields x M^2 = 576 trailing lanes amortizing weight loads;
+  * the r2/r3 derivatives contract the right factor (X @ D16^T) with the
+    same blocking after an in-VMEM transpose;
+  * flux assembly (stress, sym-grad combinations, 1/rho scaling) is fused
+    into the same kernel (VPU elementwise) so the block's rhs leaves VMEM
+    exactly once.
+
+VMEM footprint per grid step: q block (16, 9, 512) f32 = 288 KiB + two
+derivative temporaries of the same size + D16 (64 KiB) ~= 0.9 MiB << 16 MiB.
+
+Validated against ``ref.dg_volume_ref`` in interpret mode (CPU) across
+orders/dtypes; the TPU (Mosaic) path is the deployment target.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BE = 16  # elements per grid step -> 16*M = 128 MXU rows at M=8
+
+
+def _volume_kernel(q_ref, d16_ref, mat_ref, out_ref, *, M: int, metrics):
+    """q_ref: (BE, 9, M, M, M); d16_ref: (BE*M, BE*M); mat_ref: (BE, 3) =
+    (rho, lam, mu); out_ref: (BE, 9, M, M, M)."""
+    cdt = jnp.result_type(q_ref.dtype, jnp.float32)
+    q = q_ref[...].astype(cdt)
+    D16 = d16_ref[...].astype(cdt)
+    rho = mat_ref[:, 0][:, None, None, None]
+    lam = mat_ref[:, 1][:, None, None, None]
+    mu = mat_ref[:, 2][:, None, None, None]
+
+    v = q[:, 6:9]  # (BE, 3, M, M, M)
+    tr = q[:, 0] + q[:, 1] + q[:, 2]
+    S = jnp.stack(
+        [
+            lam * tr + 2 * mu * q[:, 0],
+            lam * tr + 2 * mu * q[:, 1],
+            lam * tr + 2 * mu * q[:, 2],
+            2 * mu * q[:, 3],
+            2 * mu * q[:, 4],
+            2 * mu * q[:, 5],
+        ],
+        axis=1,
+    )  # (BE, 6, M, M, M)
+
+    def dax(u, axis):
+        """Derivative along element axis via the block-diagonal D16.
+        u: (BE, F, M, M, M)."""
+        F = u.shape[1]
+        if axis == 0:
+            # rows: (BE*M); lanes: F*M^2 — one full-width MXU pass
+            x = u.transpose(0, 2, 1, 3, 4).reshape(BE * M, F * M * M)
+            y = jax.lax.dot_general(D16, x, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=cdt)
+            return y.reshape(BE, M, F, M, M).transpose(0, 2, 1, 3, 4) * metrics[0]
+        if axis == 1:
+            x = u.transpose(0, 3, 1, 2, 4).reshape(BE * M, F * M * M)
+            y = jax.lax.dot_general(D16, x, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=cdt)
+            return y.reshape(BE, M, F, M, M).transpose(0, 2, 3, 1, 4) * metrics[1]
+        x = u.transpose(0, 4, 1, 2, 3).reshape(BE * M, F * M * M)
+        y = jax.lax.dot_general(D16, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=cdt)
+        return y.reshape(BE, M, F, M, M).transpose(0, 2, 3, 4, 1) * metrics[2]
+
+    dv0 = dax(v, 0)
+    dv1 = dax(v, 1)
+    dv2 = dax(v, 2)
+    dS0 = dax(S, 0)
+    dS1 = dax(S, 1)
+    dS2 = dax(S, 2)
+
+    # SYM index: (a,b) -> 6-component slot
+    out = jnp.stack(
+        [
+            dv0[:, 0],
+            dv1[:, 1],
+            dv2[:, 2],
+            0.5 * (dv2[:, 1] + dv1[:, 2]),
+            0.5 * (dv2[:, 0] + dv0[:, 2]),
+            0.5 * (dv1[:, 0] + dv0[:, 1]),
+            (dS0[:, 0] + dS1[:, 5] + dS2[:, 4]) / rho,
+            (dS0[:, 5] + dS1[:, 1] + dS2[:, 3]) / rho,
+            (dS0[:, 4] + dS1[:, 3] + dS2[:, 2]) / rho,
+        ],
+        axis=1,
+    )
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def dg_volume_pallas(
+    q: jnp.ndarray,  # (K, 9, M, M, M)
+    D: jnp.ndarray,  # (M, M)
+    metrics: Tuple[float, float, float],
+    rho: jnp.ndarray,
+    lam: jnp.ndarray,
+    mu: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    K, F, M = q.shape[0], q.shape[1], q.shape[2]
+    if K % BE:
+        pad = BE - K % BE
+        q = jnp.concatenate([q, jnp.zeros((pad,) + q.shape[1:], q.dtype)])
+        rho = jnp.concatenate([rho, jnp.ones(pad, rho.dtype)])
+        lam = jnp.concatenate([lam, jnp.ones(pad, lam.dtype)])
+        mu = jnp.concatenate([mu, jnp.ones(pad, mu.dtype)])
+    else:
+        pad = 0
+    Kp = q.shape[0]
+    d16 = jnp.asarray(np.kron(np.eye(BE), np.asarray(D, np.float64)), q.dtype)
+    mats = jnp.stack([rho, lam, mu], axis=1).astype(q.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_volume_kernel, M=M, metrics=tuple(float(m) for m in metrics)),
+        grid=(Kp // BE,),
+        in_specs=[
+            pl.BlockSpec((BE, F, M, M, M), lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((BE * M, BE * M), lambda i: (0, 0)),
+            pl.BlockSpec((BE, 3), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BE, F, M, M, M), lambda i: (i, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Kp, F, M, M, M), q.dtype),
+        interpret=interpret,
+    )(q, d16, mats)
+    return out[:K] if pad else out

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref`` side of the
+kernel == ref allclose sweeps in tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dg.operators import riemann_correction, volume_rhs
+from repro.models.attention import naive_attention
+
+
+def dg_volume_ref(
+    q: jnp.ndarray,  # (K, 9, M, M, M)
+    D: jnp.ndarray,
+    metrics: Tuple[float, float, float],
+    rho: jnp.ndarray,
+    lam: jnp.ndarray,
+    mu: jnp.ndarray,
+) -> jnp.ndarray:
+    return volume_rhs(q, D, metrics, rho, lam, mu)
+
+
+def dg_flux_ref(
+    Sm: jnp.ndarray,  # (F, 6, M, M)
+    vm: jnp.ndarray,  # (F, 3, M, M)
+    Sp: jnp.ndarray,
+    vp: jnp.ndarray,
+    mats: jnp.ndarray,  # (F, 8): rho-,cp-,cs-,mu-,rho+,cp+,cs+,mu+
+    axis: int,
+    sign: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mat_m = {"rho": mats[:, 0], "cp": mats[:, 1], "cs": mats[:, 2], "mu": mats[:, 3]}
+    mat_p = {"rho": mats[:, 4], "cp": mats[:, 5], "cs": mats[:, 6], "mu": mats[:, 7]}
+    return riemann_correction(Sm, vm, Sp, vp, axis, sign, mat_m, mat_p)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    return naive_attention(q, k, v, causal=causal, window=window, scale=scale)

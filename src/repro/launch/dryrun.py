@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * ``make_production_mesh()`` builds the 16x16 single-pod or 2x16x16
+    multi-pod mesh over 512 forced host devices;
+  * every model input/param/state is a ShapeDtypeStruct (eval_shape), so
+    nothing is allocated;
+  * ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()`` must
+    succeed; memory_analysis() proves per-device fit, cost_analysis() +
+    loop-aware HLO analysis feed the roofline (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, cells_for
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_input_specs, prefill_input_specs, train_input_specs
+from repro.models.zoo import LM, get_config, list_archs
+from repro.optim import OptConfig, init_opt_state
+from repro.parallel.steps import (
+    accum_layout,
+    make_prefill_step,
+    make_serve_step,
+    make_shardings,
+    make_train_step,
+)
+
+# v5e roofline constants (assignment)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, *, grad_sync: str = "auto",
+               fsdp: bool = True, extra_cfg: Optional[Dict[str, Any]] = None,
+               micro_per_device: int = 1):
+    """Returns (lowered_fn, lower_args) for the cell."""
+    cfg = get_config(arch).replace(kernel_impl="xla", **(extra_cfg or {}))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    ep_size = mesh.shape["data"] if cfg.n_experts else 1
+    lm = LM(cfg, ep_size=ep_size)
+    params_sds = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+
+    if shape.kind == "train":
+        accum, micro = accum_layout(shape.global_batch, dp, target_per_device=micro_per_device)
+        sh = make_shardings(lm, mesh, kind="train", accum=True, fsdp=fsdp,
+                            batch_shardable=(micro % dp == 0))
+        batch = train_input_specs(cfg, shape, accum, micro)
+        opt_sds = jax.eval_shape(init_opt_state, params_sds)
+        step = make_train_step(lm, OptConfig(), sh, grad_sync=grad_sync)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh.params, sh.opt, sh.batch),
+            out_shardings=(sh.params, sh.opt, None),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (params_sds, opt_sds, batch), mesh, lm
+
+    if shape.kind == "prefill":
+        sh = make_shardings(lm, mesh, kind="prefill", fsdp=fsdp,
+                            batch_shardable=(shape.global_batch % dp == 0))
+        batch = prefill_input_specs(cfg, shape)
+        step = make_prefill_step(lm, sh)
+        jitted = jax.jit(step, in_shardings=(sh.params, sh.batch))
+        return jitted, (params_sds, batch), mesh, lm
+
+    # decode
+    sh = make_shardings(lm, mesh, kind="decode", fsdp=fsdp,
+                        batch_shardable=(shape.global_batch % dp == 0))
+    tok_specs, cache_sds = decode_input_specs(lm, shape)
+    step = make_serve_step(lm, sh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(sh.params, sh.cache, sh.batch["tokens"]),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_sds, cache_sds, tok_specs["tokens"]), mesh, lm
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, full_analysis: bool = True,
+             grad_sync: str = "auto", fsdp: bool = True,
+             extra_cfg: Optional[Dict[str, Any]] = None,
+             micro_per_device: int = 1,
+             dynamic_trips: Optional[float] = None) -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    t0 = time.time()
+    jitted, args, mesh, lm = build_cell(arch, shape_name, multi_pod,
+                                        grad_sync=grad_sync, fsdp=fsdp, extra_cfg=extra_cfg,
+                                        micro_per_device=micro_per_device)
+    lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    # CPU backend exposes these attributes; guard for portability
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            rec[attr] = int(v)
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost_flops"] = float(ca.get("flops", -1.0))
+    rec["xla_cost_bytes"] = float(ca.get("bytes accessed", -1.0))
+
+    if full_analysis:
+        text = compiled.as_text()
+        rec["hlo_chars"] = len(text)
+        rec.update(analyze(text, dynamic_trips=dynamic_trips))
+        chips = 512 if multi_pod else 256
+        rec["chips"] = chips
+        rec["t_compute_s"] = rec["flops"] / PEAK_FLOPS
+        # memory term: the TPU-fused (lower-bound) estimate; the unfused
+        # upper bound is kept as t_memory_upper_s (methodology: DESIGN.md)
+        rec["t_memory_s"] = rec["mem_bytes_fused"] / HBM_BW
+        rec["t_memory_upper_s"] = rec["mem_bytes"] / HBM_BW
+        rec["t_collective_s"] = rec["collective_bytes_total"] / ICI_BW
+        dom = max(("compute", "memory", "collective"),
+                  key=lambda k: rec[f"t_{k}_s"])
+        rec["dominant"] = dom
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--grad-sync", default="auto", choices=["auto", "podwise", "podwise_int8"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fast", action="store_true", help="skip HLO text analysis")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON records")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = []
+        for aid in list_archs():
+            for c in cells_for(get_config(aid)):
+                cells.append(c)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [c for c in cells_for(get_config(args.arch)) if c.shape.name == args.shape]
+
+    n_ok = n_skip = n_fail = 0
+    for cell in cells:
+        for mp in meshes:
+            name = f"{cell.arch_id}/{cell.shape.name}/{'2x16x16' if mp else '16x16'}"
+            if cell.skip:
+                print(f"SKIP  {name}: {cell.skip}", flush=True)
+                rec = {"arch": cell.arch_id, "shape": cell.shape.name,
+                       "mesh": "2x16x16" if mp else "16x16", "skipped": cell.skip}
+                n_skip += 1
+            else:
+                try:
+                    rec = run_cell(cell.arch_id, cell.shape.name, mp,
+                                   full_analysis=not args.fast,
+                                   grad_sync=args.grad_sync, fsdp=not args.no_fsdp)
+                    print(f"OK    {name}: lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                          f"temp/dev {rec.get('temp_size_in_bytes', 0)/2**30:.2f} GiB "
+                          f"dom={rec.get('dominant', '?')}", flush=True)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    print(f"FAIL  {name}: {e}", flush=True)
+                    traceback.print_exc()
+                    rec = {"arch": cell.arch_id, "shape": cell.shape.name,
+                           "mesh": "2x16x16" if mp else "16x16", "error": str(e)[:2000]}
+                    n_fail += 1
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fn = f"{cell.arch_id}_{cell.shape.name}_{'multi' if mp else 'single'}.json"
+                with open(os.path.join(args.out, fn.replace('/', '_')), "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_fail} failed", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; smoke tests and benchmarks see the real single CPU
+device and use ``debug_mesh``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def debug_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (possibly fake) local devices exist."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

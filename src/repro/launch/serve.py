@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a prompt batch, decode with greedy
+sampling, report per-token latency/throughput.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import smoke_config
+from repro.data.pipeline import _rng
+from repro.launch.mesh import debug_mesh, make_production_mesh
+from repro.models.zoo import LM, get_config
+from repro.parallel.steps import make_serve_step, make_shardings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if cfg.is_encoder_only:
+        raise SystemExit(f"{cfg.arch_id} is encoder-only: no decode serving")
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        mesh = debug_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    ep = max(1, min(cfg.n_experts, mesh.shape["data"])) if cfg.n_experts else 1
+    lm = LM(cfg, ep_size=ep)
+    params = lm.init(jax.random.PRNGKey(args.seed))
+
+    g = _rng(args.seed, 0)
+    prompts = g.integers(0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
+    batch = {"tokens": jnp.asarray(prompts)}
+
+    sh = make_shardings(lm, mesh, kind="decode", batch_shardable=False)
+    serve_step = jax.jit(make_serve_step(lm, sh), donate_argnums=(1,))
+    prefill = jax.jit(lambda p, b: lm.prefill(p, b, max_len=args.prompt_len + args.gen + 8))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab_size, logits, -jnp.inf)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    out_tokens = [np.asarray(tok)]
+    t1 = time.time()
+    for _ in range(args.gen - 1):
+        tok, cache = serve_step(params, cache, tok)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t1
+
+    gen = np.stack(out_tokens, axis=1)
+    assert gen.shape == (args.batch, args.gen)
+    assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
+    per_tok = t_decode / max(1, args.gen - 1)
+    print(f"arch={cfg.arch_id} batch={args.batch} prefill({args.prompt_len} tok)={t_prefill*1e3:.1f}ms "
+          f"decode={per_tok*1e3:.2f} ms/step throughput={args.batch/per_tok:.1f} tok/s")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Pattern: weak-type-correct, shardable, zero allocation — everything the
+dry-run lowers against is an ``eval_shape`` artifact.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.common import ModelConfig
+from repro.models.zoo import LM, VIS_EMBED_DIM
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec, accum: int, micro: int) -> Dict[str, Any]:
+    S, adt = shape.seq_len, jnp.dtype(cfg.dtype)
+    assert accum * micro == shape.global_batch
+    lead = (accum, micro)
+    if cfg.family == "audio":
+        return {
+            "features": SDS(lead + (S, cfg.d_model), adt),
+            "labels": SDS(lead + (S,), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        ni = cfg.frontend_tokens
+        return {
+            "tokens": SDS(lead + (S - ni,), jnp.int32),
+            "patches": SDS(lead + (ni, VIS_EMBED_DIM), adt),
+            "labels": SDS(lead + (S - ni,), jnp.int32),
+        }
+    return {
+        "tokens": SDS(lead + (S,), jnp.int32),
+        "labels": SDS(lead + (S,), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S, adt = shape.global_batch, shape.seq_len, jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        return {"features": SDS((B, S, cfg.d_model), adt)}
+    if cfg.family == "vlm":
+        ni = cfg.frontend_tokens
+        return {
+            "tokens": SDS((B, S - ni), jnp.int32),
+            "patches": SDS((B, ni, VIS_EMBED_DIM), adt),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_input_specs(lm: LM, shape: ShapeSpec) -> Tuple[Dict[str, Any], Any]:
+    """(token specs, cache specs): 'one new token with a KV cache of
+    seq_len' — capacity seq_len, len = seq_len - 1, so the written slot is
+    in bounds and attention spans the full context."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: lm.init_cache(B, S))
+    tokens = SDS((B,), jnp.int32)
+    return {"tokens": tokens}, cache

@@ -1,0 +1,327 @@
+"""Model configuration and shared building blocks for the LM zoo.
+
+Pure-JAX (no flax): parameters are nested-dict pytrees, every layer is a
+function.  Layer stacks are scanned (params stacked on a leading ``layers``
+axis) so HLO size is depth-independent — this keeps the 512-device dry-run
+compiles tractable and is how production JAX LM frameworks are built.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+LANE = 128  # TPU lane width; vocab and head paddings align to this
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int  # logical (published) q heads; 0 for attn-free
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int  # logical (published)
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rotary_pct: float = 1.0  # stablelm-2 uses partial rotary
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    causal: bool = True  # False for encoder-only (hubert)
+    mlp_type: str = "gated_silu"  # gated_silu | gelu
+    # sliding-window attention (None = full); hybrid models may mark a few
+    # layers global via global_layers.
+    sliding_window: Optional[int] = None
+    global_layers: Tuple[int, ...] = ()
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_impl: str = "ep"  # ep (shard_map all-to-all) | gspmd (scatter/gather)
+    # SSM (mamba1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+    # hybrid (hymba): number of learned meta tokens prepended to the sequence
+    n_meta_tokens: int = 0
+    # frontends (vlm / audio are backbone-only; the frontend is a stub that
+    # provides precomputed patch/frame embeddings)
+    frontend_tokens: int = 0  # e.g. image-patch positions in the sequence
+    use_conv_pos: bool = False  # hubert-style convolutional positional embedding
+    # numerics / impl
+    flash_skip: bool = False  # causal KV-sweep skipping (inference paths)
+    attn_block_q: int = 512
+    attn_block_k: int = 512
+    ssm_scan: str = "assoc"  # assoc | seq (selective-scan inner algorithm)
+    ssm_chunk: int = 128
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    kernel_impl: str = "xla"  # xla | pallas | interpret
+    remat: str = "full"  # full | none | dots
+    # TP head-sharding plan inputs (see HeadShardingPlan)
+    tp_size: int = 1  # padded head layout is computed for this TP degree
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(1, self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab_size, LANE)
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def has_attention(self) -> bool:
+        return self.n_heads > 0
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.ssm_state > 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# GQA head sharding plan (DESIGN.md section 4)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadShardingPlan:
+    """Padded head layout making GQA shard on a fixed ``model`` axis.
+
+    Cases (T = tp size, Q/G = logical q/kv heads):
+      * G % T == 0: kv sharded directly; q padded to a multiple of T with
+        group-aligned buckets.
+      * T % G == 0: kv heads *duplicated* rep=T/G times (kv'[j]=kv[j//rep]),
+        each duplicate serving a bucket of ceil(Q/G/rep) q heads; q padded to
+        G' * bucket.  Every device then owns whole (padded) GQA groups.
+      * otherwise (e.g. hymba 16 % 5 != 0): kv replicated across the model
+        axis; q padded to a multiple of T; per-q-head kv index mapping.
+
+    Padded q heads have zero-initialized projections and are sliced away by
+    the output projection, so the padded model is *exactly* the logical
+    model; the extra FLOPs are visible in the roofline useful-FLOPs ratio.
+    """
+
+    q_heads: int  # logical
+    kv_heads: int  # logical
+    tp: int
+    padded_q: int
+    padded_kv: int  # padded/duplicated kv head count (== tp when duplicated)
+    kv_replicated: bool
+    kv_dup: Tuple[int, ...]  # padded kv head -> logical kv head
+    q_to_kv: Tuple[int, ...]  # padded q head -> *padded* kv head
+    q_slot_of_logical: Tuple[int, ...]  # logical q head -> padded slot
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.padded_q // self.padded_kv
+
+
+def make_head_plan(q_heads: int, kv_heads: int, tp: int) -> HeadShardingPlan:
+    q_per_g = q_heads // kv_heads
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    if kv_heads % tp == 0 or tp % kv_heads == 0:
+        if kv_heads % tp == 0:
+            rep = 1
+            padded_kv = kv_heads
+        else:
+            rep = tp // kv_heads
+            padded_kv = tp
+        bucket = -(-q_per_g // rep)  # ceil
+        padded_q = padded_kv * bucket
+        kv_dup = tuple(j // rep for j in range(padded_kv))
+        q_to_kv = tuple(h // bucket for h in range(padded_q))
+        slot = []
+        for h in range(q_heads):
+            g, i = divmod(h, q_per_g)  # logical group, index in group
+            r, k = divmod(i, bucket)  # bucket within the group's rep buckets
+            slot.append((g * rep + r) * bucket + k)
+        return HeadShardingPlan(
+            q_heads, kv_heads, tp, padded_q, padded_kv, False, kv_dup, q_to_kv, tuple(slot)
+        )
+    # fallback: kv replicated
+    padded_q = pad_to(q_heads, tp)
+    kv_dup = tuple(range(kv_heads))
+    # keep logical grouping; padded heads point at kv 0 (their weights are 0)
+    q_to_kv = tuple((h // q_per_g) if h < q_heads else 0 for h in range(padded_q))
+    slot = tuple(range(q_heads))
+    return HeadShardingPlan(q_heads, kv_heads, tp, padded_q, kv_heads, True, kv_dup, q_to_kv, slot)
+
+
+# ---------------------------------------------------------------------------
+# Initializers / primitive layers
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, zero_rows: int = 0) -> jnp.ndarray:
+    """Fan-in-scaled init; optionally zero the trailing ``zero_rows`` output
+    columns (used for padded q heads so padding is exact)."""
+    w = _normal(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)
+    if zero_rows:
+        w = w.at[:, d_out - zero_rows :].set(0.0)
+    return w
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return _normal(key, (vocab, d), 1.0, dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_pct: float = 1.0) -> np.ndarray:
+    rot = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return inv.astype(np.float32)  # (rot/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, D); positions: (..., S) int32. Rotates the first
+    2*len(inv_freq) channels (partial rotary supported), HF 'neox' layout."""
+    rot = 2 * inv_freq.shape[0]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def gated_mlp_apply(params: Dict[str, Any], x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    c = lambda w: w.astype(x.dtype)  # f32 master -> activation dtype compute
+    if mlp_type == "gated_silu":
+        g = x @ c(params["w_gate"])
+        u = x @ c(params["w_up"])
+        return (jax.nn.silu(g) * u) @ c(params["w_down"])
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ c(params["w_up"]) + c(params["b_up"]))
+        return h @ c(params["w_down"]) + c(params["b_down"])
+    raise ValueError(mlp_type)
+
+
+def gated_mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "gated_silu":
+        return {
+            "w_gate": dense_init(ks[0], d, f, dt),
+            "w_up": dense_init(ks[1], d, f, dt),
+            "w_down": dense_init(ks[2], f, d, dt),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, f, dt),
+        "b_up": jnp.zeros((f,), dt),
+        "w_down": dense_init(ks[1], f, d, dt),
+        "b_down": jnp.zeros((d,), dt),
+    }
+
+
+def cross_entropy_terms(
+    logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int, z_coef: float = 1e-4
+):
+    """(nll+z sum, token count) with padded-vocab masking and label==-1 mask."""
+    logits = logits.astype(jnp.float32)
+    pv = logits.shape[-1]
+    if pv > vocab_size:
+        neg = jnp.full((pv - vocab_size,), -1e9, jnp.float32)
+        logits = logits.at[..., vocab_size:].set(neg)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * mask
+    z = jnp.square(lse) * mask * z_coef
+    return nll.sum() + z.sum(), mask.sum()
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int, z_coef: float = 1e-4
+) -> jnp.ndarray:
+    """Mean CE over tokens, masking padded vocab entries and label==-1."""
+    s, n = cross_entropy_terms(logits, labels, vocab_size, z_coef)
+    return s / jnp.maximum(n, 1.0)
+
+
+def chunked_ce_loss(
+    hidden: jnp.ndarray,  # (B, S, d) final-norm'd hidden states
+    head: jnp.ndarray,  # (d, padded_vocab)
+    labels: jnp.ndarray,  # (B, S)
+    vocab_size: int,
+    chunk: int = 1024,
+    z_coef: float = 1e-4,
+) -> jnp.ndarray:
+    """Streaming CE: the (B, S, V) f32 logits tensor is never materialized —
+    per-chunk logits are computed, reduced, and rematerialized in backward.
+    At 150k vocabs this saves multiple GB/device of the train-step footprint.
+    """
+    import jax as _jax
+    from jax import lax as _lax
+
+    B, S, d = hidden.shape
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    hs = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @partial(_jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        h_c, l_c = xs
+        logits = h_c @ head.astype(h_c.dtype)
+        s, n = cross_entropy_terms(logits, l_c, vocab_size, z_coef)
+        return (carry[0] + s, carry[1] + n), None
+
+    (s, n), _ = _lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls))
+    return s / jnp.maximum(n, 1.0)

@@ -1,0 +1,208 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b; the mamba heads of hymba).
+
+The selective scan is *chunked*: the sequence is cut into fixed chunks;
+within a chunk the linear recurrence h_t = a_t * h_{t-1} + b_t is solved
+with an associative scan, and the state is carried across chunks by an
+outer ``lax.scan``.  This bounds the materialized (B, chunk, d_inner,
+d_state) tensors (the unchunked form needs tens of GB at falcon-mamba
+sizes) and is the exact 1-D analogue of the paper's partition: chunk
+interiors are independent work, the carried state is the boundary.  A
+cross-device version of the same decomposition (state handoff via
+ppermute) is what sequence parallelism uses.
+
+Decode keeps (conv_state (B, K-1, d_inner), ssm_state (B, d_inner, N)) and
+costs O(1) per token — why the 524k-context cell is trivial for SSMs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.common import ModelConfig, dense_init
+
+
+def mamba_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, di, n, K, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv, cfg.dt_rank_
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias for softplus init in [1e-3, 1e-1]
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (di,)) * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)
+    )
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (K, di)) / math.sqrt(K)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dt),
+        "dt_w": dense_init(ks[3], r, di, dt),
+        "dt_b": dt_bias.astype(dt),
+        "A_log": jnp.log(A).astype(dt),
+        "D": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[5], di, d, dt),
+    }
+
+
+def mamba_param_axes() -> Dict[str, Any]:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_w": (None, "inner"),
+        "dt_b": ("inner",),
+        "A_log": ("inner", None),
+        "D": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via K shifted adds. x: (B, S, di), w: (K, di)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out + b
+
+
+def selective_scan(
+    u: jnp.ndarray,  # (B, S, di) conv+silu output
+    dt: jnp.ndarray,  # (B, S, di) softplus'd
+    A: jnp.ndarray,  # (di, n) negative real
+    Bc: jnp.ndarray,  # (B, S, n) input-dependent B
+    Cc: jnp.ndarray,  # (B, S, n)
+    D: jnp.ndarray,  # (di,)
+    h0: jnp.ndarray,  # (B, di, n) initial state
+    chunk: int = 128,
+    impl: str = "assoc",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """y (B, S, di), h_last (B, di, n). f32 state math.
+
+    impl="assoc": within-chunk associative scan (log-depth, materializes
+    (B, chunk, di, n) operands per combine stage — fast on parallel HW).
+    impl="seq": plain time scan carrying (B, di, n) — minimal HBM traffic;
+    the hillclimb measures the trade (EXPERIMENTS.md §Perf)."""
+    if impl == "seq":
+        def t_body(h, xs):
+            u_t, dt_t, B_t, C_t = xs  # (B,di),(B,di),(B,n),(B,n)
+            dtf = dt_t.astype(jnp.float32)
+            dA = jnp.exp(dtf[:, :, None] * A[None].astype(jnp.float32))
+            dBu = (dtf * u_t.astype(jnp.float32))[:, :, None] * B_t[:, None, :].astype(jnp.float32)
+            h = dA * h + dBu
+            y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+            return h, y
+        xs = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+              Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2))
+        h_last, ys = lax.scan(t_body, h0.astype(jnp.float32), xs)
+        y = ys.transpose(1, 0, 2) + u.astype(jnp.float32) * D.astype(jnp.float32)
+        return y.astype(u.dtype), h_last
+    B_, S, di = u.shape
+    n = A.shape[1]
+    chunk = min(chunk, S)
+    while S % chunk:  # largest divisor of S <= requested chunk
+        chunk -= 1
+    nc = S // chunk
+    uc = u.reshape(B_, nc, chunk, di).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B_, nc, chunk, di).transpose(1, 0, 2, 3)
+    Bcc = Bc.reshape(B_, nc, chunk, n).transpose(1, 0, 2, 3)
+    Ccc = Cc.reshape(B_, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, xs):
+        ucj, dtj, Bj, Cj = xs  # (B, Q, di), (B, Q, di), (B, Q, n), (B, Q, n)
+        dtj = dtj.astype(jnp.float32)
+        dA = jnp.exp(dtj[..., None] * A[None, None].astype(jnp.float32))  # (B,Q,di,n)
+        dBu = (dtj * ucj.astype(jnp.float32))[..., None] * Bj[:, :, None, :].astype(jnp.float32)
+        # associative scan of (a, b) -> h_t = a_t h_{t-1} + b_t along Q
+        def comb(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        aP, bP = lax.associative_scan(comb, (dA, dBu), axis=1)
+        h_t = aP * h[:, None] + bP  # (B, Q, di, n)
+        y = jnp.einsum("bqdn,bqn->bqd", h_t, Cj.astype(jnp.float32))
+        return h_t[:, -1], y
+
+    h_last, ys = lax.scan(chunk_body, h0.astype(jnp.float32), (uc, dtc, Bcc, Ccc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B_, S, di)
+    y = y + u.astype(jnp.float32) * D.astype(jnp.float32)
+    return y.astype(u.dtype), h_last
+
+
+def mamba_apply(
+    params: Dict[str, Any],
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    # (impl selection threads through from cfg.ssm_scan)
+    """Full-sequence (train / prefill) pass.
+
+    With ``return_state`` also returns the decode state {conv, ssm} as of the
+    last position (used by prefill to seed decoding)."""
+    di, n, r, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_, cfg.ssm_conv
+    xz = x @ params["in_proj"].astype(x.dtype)  # (B, S, 2di)
+    xr_pre, z = jnp.split(xz, 2, axis=-1)
+    xr = jax.nn.silu(_causal_conv(xr_pre, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)))
+    proj = xr @ params["x_proj"].astype(x.dtype)  # (B, S, r + 2n)
+    dt_r, Bc, Cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_w"].astype(x.dtype) + params["dt_b"].astype(x.dtype))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    h0 = jnp.zeros((x.shape[0], di, n), jnp.float32)
+    y, h_last = selective_scan(xr, dt, A, Bc, Cc, params["D"], h0, chunk=chunk, impl=cfg.ssm_scan)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    # conv state: last K-1 *pre-conv* inputs, left-padded if S < K-1
+    S = x.shape[1]
+    if S >= K - 1:
+        conv_state = xr_pre[:, S - (K - 1):]
+    else:
+        conv_state = jnp.pad(xr_pre, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssm": h_last}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_step(
+    params: Dict[str, Any],
+    x_t: jnp.ndarray,  # (B, d) one token
+    state: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """O(1) decode step."""
+    di, n, r, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_, cfg.ssm_conv
+    xz = x_t @ params["in_proj"].astype(x_t.dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+    # conv over [conv_state ; x]
+    hist = jnp.concatenate([state["conv"], xr[:, None, :]], axis=1)  # (B, K, di)
+    w = params["conv_w"].astype(x_t.dtype)
+    xc = jnp.einsum("bkd,kd->bd", hist, w) + params["conv_b"].astype(x_t.dtype)
+    xc = jax.nn.silu(xc)
+    proj = xc @ params["x_proj"].astype(x_t.dtype)
+    dt_r, Bc, Cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_w"].astype(x_t.dtype) + params["dt_b"].astype(x_t.dtype))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[:, :, None] * A[None])  # (B, di, n)
+    dBu = (dtf * xc.astype(jnp.float32))[:, :, None] * Bc[:, None, :].astype(jnp.float32)
+    h = dA * state["ssm"] + dBu
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32)) + xc.astype(jnp.float32) * params["D"].astype(jnp.float32)
+    out = (y.astype(x_t.dtype) * jax.nn.silu(z)) @ params["out_proj"].astype(x_t.dtype)
+    new_state = {"conv": hist[:, 1:], "ssm": h}
+    return out, new_state

@@ -1,0 +1,344 @@
+"""Unified LM assembly for all 10 assigned architectures.
+
+One code path builds dense / MoE / SSM / hybrid / VLM / audio-encoder
+backbones from a ModelConfig:
+
+  * layers are stacked on a leading axis and scanned (HLO depth-independent);
+    models with heterogeneous layers (hymba's few global-attention layers
+    among SWA layers) are split into contiguous *segments*, each scanned;
+  * GQA head padding/duplication follows the HeadShardingPlan — padded q
+    heads are masked after attention, so the padded model is exactly the
+    logical model, under training too (their grads vanish);
+  * kv projections hold *logical* kv heads and are expanded (duplicated) at
+    apply time, so duplicate heads cannot diverge under training;
+  * decode caches: rolling buffers of capacity ``window`` for SWA layers,
+    full-length buffers for global/causal layers, O(1) states for mamba.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.attention import decode_attention, flash_attention, update_cache
+from repro.models.common import (
+    HeadShardingPlan,
+    ModelConfig,
+    apply_rope,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    gated_mlp_apply,
+    gated_mlp_init,
+    make_head_plan,
+    rmsnorm,
+    rope_freqs,
+)
+from repro.models.mamba import (
+    mamba_apply,
+    mamba_init,
+    mamba_init_state,
+    mamba_param_axes,
+    mamba_step,
+)
+from repro.models.moe import moe_apply, moe_ep_sharded, moe_init, moe_param_axes
+from repro.parallel.axes import current_mesh, shard
+
+
+# ---------------------------------------------------------------------------
+# Layer schedule: contiguous segments of identical layer kind
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    start: int
+    count: int
+    window: Optional[int]  # None = full attention for this segment
+
+
+def layer_schedule(cfg: ModelConfig) -> List[Segment]:
+    L = cfg.n_layers
+    if not cfg.has_attention or cfg.sliding_window is None or not cfg.global_layers:
+        w = cfg.sliding_window if cfg.has_attention else None
+        return [Segment(0, L, w)]
+    segs: List[Segment] = []
+    glob = set(cfg.global_layers)
+    i = 0
+    while i < L:
+        if i in glob:
+            segs.append(Segment(i, 1, None))
+            i += 1
+        else:
+            j = i
+            while j < L and j not in glob:
+                j += 1
+            segs.append(Segment(i, j - i, cfg.sliding_window))
+            i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer
+# ---------------------------------------------------------------------------
+
+
+def _head_mask(plan: HeadShardingPlan) -> np.ndarray:
+    m = np.zeros(plan.padded_q, np.float32)
+    for s in plan.q_slot_of_logical:
+        m[s] = 1.0
+    return m
+
+
+def attn_init(key, cfg: ModelConfig, plan: HeadShardingPlan) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, plan.padded_q * hd, dt),
+        "wk": dense_init(ks[1], d, plan.kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, plan.kv_heads * hd, dt),
+        "wo": dense_init(ks[3], plan.padded_q * hd, d, dt),
+        "ln": jnp.ones((d,), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((plan.padded_q * hd,), dt)
+        p["bk"] = jnp.zeros((plan.kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((plan.kv_heads * hd,), dt)
+    return p
+
+
+def attn_param_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    p = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", None),
+        "wv": ("embed", None),
+        "wo": ("heads", "embed"),
+        "ln": (None,),
+    }
+    if cfg.qkv_bias:
+        p.update({"bq": ("heads",), "bk": (None,), "bv": (None,)})
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, plan: HeadShardingPlan, positions, inv_freq):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, plan.padded_q, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, plan.kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, plan.kv_heads, hd).transpose(0, 2, 1, 3)
+    if inv_freq is not None:
+        q = apply_rope(q, positions[:, None, :], inv_freq)
+        k = apply_rope(k, positions[:, None, :], inv_freq)
+    if not plan.kv_replicated:  # expand logical kv -> padded/duplicated kv heads
+        idx = jnp.asarray(plan.kv_dup, jnp.int32)
+        k = jnp.take(k, idx, axis=1)
+        v = jnp.take(v, idx, axis=1)
+        k = shard(k, "batch", "kv_heads", None, None)
+        v = shard(v, "batch", "kv_heads", None, None)
+    return q, k, v
+
+
+def attn_apply(
+    p,
+    x,
+    cfg: ModelConfig,
+    plan: HeadShardingPlan,
+    *,
+    window: Optional[int],
+    positions,
+    inv_freq,
+    q_offset: int = 0,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence attention. Returns (out, (k, v)) — k/v for cache builds."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, plan, positions, inv_freq)
+    q = shard(q, "batch", "heads", None, None)
+    kv_map = plan.q_to_kv if plan.kv_replicated else None
+    out = flash_attention(q, k, v, causal=cfg.causal, window=window, q_offset=q_offset,
+                          kv_map=kv_map, dynamic_skip=cfg.flash_skip,
+                          block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    out = out * jnp.asarray(_head_mask(plan), out.dtype)[None, :, None, None]
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, plan.padded_q * cfg.head_dim_)
+    return out @ p["wo"].astype(x.dtype), (k, v)
+
+
+def attn_decode(
+    p,
+    x_t,  # (B, d)
+    kcache,
+    vcache,  # (B, G', C, hd)
+    cache_len,  # scalar int32
+    cfg: ModelConfig,
+    plan: HeadShardingPlan,
+    *,
+    window: Optional[int],
+    inv_freq,
+):
+    B = x_t.shape[0]
+    hd = cfg.head_dim_
+    rolling = window is not None and kcache.shape[2] == window
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    q, k, v = _qkv(p, x_t[:, None, :], cfg, plan, pos, inv_freq)
+    kcache, vcache = update_cache(kcache, vcache, k, v, cache_len, rolling=rolling)
+    kv_map = plan.q_to_kv if plan.kv_replicated else None
+    out = decode_attention(
+        q, kcache, vcache, cache_len + 1, window=window, rolling=rolling, kv_map=kv_map
+    )
+    out = out * jnp.asarray(_head_mask(plan), out.dtype)[None, :, None, None]
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, plan.padded_q * hd)
+    y = (out @ p["wo"].astype(x_t.dtype))[:, 0]
+    return y, kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, plan: Optional[HeadShardingPlan], ep_size: int) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if cfg.has_attention:
+        p["attn"] = attn_init(ks[0], cfg, plan)
+    if cfg.has_ssm:
+        p["mamba"] = mamba_init(ks[1], cfg)
+        p["ln_m"] = jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype))
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[2], cfg, ep_size)
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype))
+    elif cfg.d_ff > 0:
+        p["mlp"] = gated_mlp_init(ks[3], cfg)
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def block_param_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    p: Dict[str, Any] = {}
+    if cfg.has_attention:
+        p["attn"] = attn_param_axes(cfg)
+    if cfg.has_ssm:
+        p["mamba"] = mamba_param_axes()
+        p["ln_m"] = (None,)
+    if cfg.family == "moe":
+        p["moe"] = moe_param_axes()
+        p["ln2"] = (None,)
+    elif cfg.d_ff > 0:
+        mlp = (
+            {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"), "w_down": ("ff", "embed")}
+            if cfg.mlp_type == "gated_silu"
+            else {"w_up": ("embed", "ff"), "b_up": ("ff",), "w_down": ("ff", "embed"), "b_down": (None,)}
+        )
+        p["mlp"] = mlp
+        p["ln2"] = (None,)
+    return p
+
+
+def block_apply(
+    p,
+    x,  # (B, S, d)
+    cfg: ModelConfig,
+    plan,
+    *,
+    window,
+    positions,
+    inv_freq,
+    ep_size: int,
+    q_offset: int = 0,
+    collect_seed: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Returns (x_out, aux_loss, cache_seed) where cache_seed carries the
+    per-layer (k, v) / mamba-final-state needed to build a decode cache."""
+    aux = jnp.zeros((), jnp.float32)
+    seed: Dict[str, Any] = {}
+    mix = jnp.zeros_like(x)
+    if cfg.has_attention:
+        h = rmsnorm(x, p["attn"]["ln"], cfg.norm_eps)
+        h = shard(h, "batch", None, None)
+        a_out, (k, v) = attn_apply(
+            p["attn"], h, cfg, plan, window=window, positions=positions, inv_freq=inv_freq, q_offset=q_offset
+        )
+        mix = mix + a_out
+        if collect_seed:
+            seed["kv"] = (k, v)
+    if cfg.has_ssm:
+        hm = rmsnorm(x, p["ln_m"], cfg.norm_eps)
+        if collect_seed:
+            m_out, mstate = mamba_apply(p["mamba"], hm, cfg, chunk=cfg.ssm_chunk, return_state=True)
+            seed["mamba"] = mstate
+        else:
+            m_out = mamba_apply(p["mamba"], hm, cfg, chunk=cfg.ssm_chunk)
+        mix = mix + m_out
+    if cfg.has_attention and cfg.has_ssm:
+        mix = mix * 0.5  # hymba: mean of parallel attention and mamba paths
+    x = x + shard(mix, "batch", None, None)
+    if cfg.family == "moe":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        B, S, d = h.shape
+        norm_topk = cfg.arch_id.startswith("mixtral")
+        mesh = current_mesh()
+        if mesh is not None and "data" in mesh.axis_names and cfg.moe_impl == "ep":
+            y, metrics = moe_ep_sharded(p["moe"], h, cfg, mesh, norm_topk=norm_topk)
+            y = y.reshape(B * S, d)
+        else:
+            y, metrics = moe_apply(p["moe"], h.reshape(B * S, d), cfg, ep_size=ep_size,
+                                   norm_topk=norm_topk)
+        x = x + y.reshape(B, S, d)
+        aux = aux + metrics["aux_loss"] * cfg.router_aux_coef
+    elif cfg.d_ff > 0:
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + gated_mlp_apply(p["mlp"], h, cfg.mlp_type)
+    return shard(x, "batch", None, None), aux, seed
+
+
+def block_decode(
+    p,
+    x_t,  # (B, d)
+    layer_cache: Dict[str, Any],
+    cache_len,
+    cfg: ModelConfig,
+    plan,
+    *,
+    window,
+    inv_freq,
+    ep_size: int,
+):
+    aux_updates: Dict[str, Any] = {}
+    mix = jnp.zeros_like(x_t)
+    if cfg.has_attention:
+        h = rmsnorm(x_t[:, None, :], p["attn"]["ln"], cfg.norm_eps)[:, 0]
+        a_out, kc, vc = attn_decode(
+            p["attn"], h, layer_cache["k"], layer_cache["v"], cache_len, cfg, plan,
+            window=window, inv_freq=inv_freq,
+        )
+        mix = mix + a_out
+        aux_updates["k"], aux_updates["v"] = kc, vc
+    if cfg.has_ssm:
+        hm = rmsnorm(x_t[:, None, :], p["ln_m"], cfg.norm_eps)[:, 0]
+        m_out, new_state = mamba_step(p["mamba"], hm, {"conv": layer_cache["conv"], "ssm": layer_cache["ssm"]}, cfg)
+        mix = mix + m_out
+        aux_updates["conv"], aux_updates["ssm"] = new_state["conv"], new_state["ssm"]
+    if cfg.has_attention and cfg.has_ssm:
+        mix = mix * 0.5
+    x_t = x_t + mix
+    if cfg.family == "moe":
+        h = rmsnorm(x_t[:, None, :], p["ln2"], cfg.norm_eps)[:, 0]
+        y, _ = moe_apply(p["moe"], h, cfg, ep_size=ep_size, norm_topk=cfg.arch_id.startswith("mixtral"))
+        x_t = x_t + y
+    elif cfg.d_ff > 0:
+        h = rmsnorm(x_t[:, None, :], p["ln2"], cfg.norm_eps)[:, 0]
+        x_t = x_t + gated_mlp_apply(p["mlp"], h, cfg.mlp_type)
+    return x_t, aux_updates

@@ -1,0 +1,356 @@
+"""The LM zoo: builds any assigned architecture from its ModelConfig.
+
+Public surface (all pure functions of pytrees):
+
+    lm = LM(cfg, ep_size=..., multi_pod=...)
+    params            = lm.init(key)            # or jax.eval_shape(lm.init, key)
+    axes              = lm.param_axes()         # logical-axes tree for sharding
+    loss, metrics     = lm.loss(params, batch)
+    logits, cache     = lm.prefill(params, batch)
+    logits, cache     = lm.decode_step(params, cache, tokens)
+    cache             = lm.init_cache(batch_size, max_len)  # zeros (or eval_shape)
+
+Frontends: [vlm] and [audio] archs are backbone-only per the assignment —
+``batch`` carries precomputed patch/frame embeddings from the (stub)
+frontend; the text/feature paths merge inside ``_embed_inputs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.common import (
+    ModelConfig,
+    chunked_ce_loss,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    make_head_plan,
+    rmsnorm,
+    rope_freqs,
+)
+from repro.models.mamba import mamba_init_state
+from repro.models.transformer import (
+    Segment,
+    block_apply,
+    block_decode,
+    block_init,
+    block_param_axes,
+    layer_schedule,
+)
+from repro.parallel.axes import shard
+
+VIS_EMBED_DIM = 1024  # CLIP-L patch embedding width (llava frontend stub)
+
+
+def _stack_layers(trees: List[Any]):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _slice_layers(tree, start: int, count: int):
+    return jax.tree.map(lambda x: lax.slice_in_dim(x, start, start + count, axis=0), tree)
+
+
+def _squeeze0(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, ep_size: int = 1):
+        self.cfg = cfg
+        self.ep_size = ep_size
+        self.plan = (
+            make_head_plan(cfg.n_heads, cfg.n_kv_heads, cfg.tp_size) if cfg.has_attention else None
+        )
+        self.segments = layer_schedule(cfg)
+        self.inv_freq = (
+            jnp.asarray(rope_freqs(cfg.head_dim_, cfg.rope_theta, cfg.rotary_pct))
+            if cfg.has_attention
+            else None
+        )
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        n_extra = 5 + cfg.n_layers
+        ks = list(jax.random.split(key, n_extra))
+        p: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            # input is precomputed frame embeddings at d_model; learn a conv
+            # positional embedding (wav2vec2/HuBERT style, grouped conv)
+            g = 16
+            p["pos_conv"] = {
+                "w": (jax.random.normal(ks[0], (128, cfg.d_model // g, cfg.d_model)) * 0.02).astype(dt),
+                "b": jnp.zeros((cfg.d_model,), dt),
+            }
+        else:
+            p["embed"] = embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt)
+        if cfg.family == "vlm":
+            p["mm_proj"] = {
+                "w1": dense_init(ks[1], VIS_EMBED_DIM, cfg.d_model, dt),
+                "b1": jnp.zeros((cfg.d_model,), dt),
+                "w2": dense_init(ks[2], cfg.d_model, cfg.d_model, dt),
+                "b2": jnp.zeros((cfg.d_model,), dt),
+            }
+        if cfg.n_meta_tokens:
+            p["meta"] = (jax.random.normal(ks[3], (cfg.n_meta_tokens, cfg.d_model)) * 0.02).astype(dt)
+        layers = [block_init(ks[5 + i], cfg, self.plan, self.ep_size) for i in range(cfg.n_layers)]
+        p["layers"] = _stack_layers(layers)
+        p["final_ln"] = jnp.ones((cfg.d_model,), dt)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[4], cfg.d_model, cfg.padded_vocab, dt)
+        return p
+
+    def param_axes(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        ax: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            ax["pos_conv"] = {"w": (None, None, "embed"), "b": (None,)}
+        else:
+            # vocab-dim sharding only: an ("vocab", "embed") 2-D sharding makes
+            # the token gather clash with batch sharding (GSPMD falls back to
+            # full rematerialization of (B, S, d) f32 temporaries)
+            ax["embed"] = ("vocab", None)
+        if cfg.family == "vlm":
+            ax["mm_proj"] = {"w1": (None, "embed"), "b1": (None,), "w2": ("embed", None), "b2": (None,)}
+        if cfg.n_meta_tokens:
+            ax["meta"] = (None, None)
+        blk = block_param_axes(cfg)
+        ax["layers"] = jax.tree.map(lambda t: ("layers",) + t, blk,
+                                    is_leaf=lambda v: isinstance(v, tuple))
+        ax["final_ln"] = (None,)
+        if not cfg.tie_embeddings:
+            ax["lm_head"] = (None, "vocab")
+        return ax
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, int]:
+        """Returns (x (B, S_total, d), n_prefix) — prefix = meta/image tokens."""
+        cfg = self.cfg
+        adt = cfg.activation_dtype
+        if cfg.family == "audio":
+            x = batch["features"].astype(adt)
+            w = params["pos_conv"]["w"].astype(adt)
+            pos = lax.conv_general_dilated(
+                x, w, window_strides=(1,), padding="SAME",
+                dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=16,
+            )
+            x = x + jax.nn.gelu(pos + params["pos_conv"]["b"].astype(adt))
+            return x, 0
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"].astype(adt), tokens, axis=0)
+        n_prefix = 0
+        if cfg.family == "vlm" and "patches" in batch:
+            mp = params["mm_proj"]
+            pe = batch["patches"].astype(adt)
+            pe = jax.nn.gelu(pe @ mp["w1"].astype(adt) + mp["b1"].astype(adt))
+            pe = pe @ mp["w2"].astype(adt) + mp["b2"].astype(adt)
+            x = jnp.concatenate([pe, x], axis=1)
+            n_prefix += pe.shape[1]
+        if cfg.n_meta_tokens:
+            B = x.shape[0]
+            meta = jnp.broadcast_to(
+                params["meta"].astype(adt)[None], (B, cfg.n_meta_tokens, cfg.d_model)
+            )
+            x = jnp.concatenate([meta, x], axis=1)
+            n_prefix += cfg.n_meta_tokens
+        return x, n_prefix
+
+    def _logits(self, params, x) -> jnp.ndarray:
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head.astype(x.dtype)
+        return shard(logits, "batch", None, "vocab")
+
+    # ------------------------------------------------------------------
+    # forward / loss
+    # ------------------------------------------------------------------
+    def forward(
+        self, params, batch, collect_seed: bool = False, return_hidden: bool = False
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, List[Any], int]:
+        """Returns (logits_or_hidden, aux_loss, seeds_per_segment, n_prefix)."""
+        cfg = self.cfg
+        x, n_prefix = self._embed_inputs(params, batch)
+        x = shard(x, "batch", None, None)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        aux_total = jnp.zeros((), jnp.float32)
+        seeds: List[Any] = []
+        for seg in self.segments:
+            seg_params = _slice_layers(params["layers"], seg.start, seg.count)
+
+            def body(carry, lp, _seg=seg):
+                h, aux = carry
+                h, a, seed = block_apply(
+                    lp, h, cfg, self.plan, window=_seg.window, positions=positions,
+                    inv_freq=self.inv_freq, ep_size=self.ep_size, collect_seed=collect_seed,
+                )
+                return (h, aux + a), (seed if collect_seed else None)
+
+            if cfg.remat == "full":
+                body = jax.checkpoint(body, prevent_cse=False)
+            (x, aux_total), seg_seed = lax.scan(body, (x, aux_total), seg_params)
+            seeds.append(seg_seed)
+        if return_hidden:
+            return x, aux_total, seeds, n_prefix
+        logits = self._logits(params, x)
+        return logits, aux_total, seeds, n_prefix
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        hidden, aux, _, n_prefix = self.forward(params, batch, return_hidden=True)
+        labels = batch["labels"]
+        if n_prefix:
+            prefix = jnp.full(labels.shape[:1] + (n_prefix,), -1, labels.dtype)
+            labels = jnp.concatenate([prefix, labels], axis=1)
+        hidden = rmsnorm(hidden, params["final_ln"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ce = chunked_ce_loss(hidden, head, labels, cfg.vocab_size)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # caches / serving
+    # ------------------------------------------------------------------
+    def _seg_cache_capacity(self, seg: Segment, max_len: int) -> int:
+        if seg.window is not None:
+            return min(seg.window, max_len)
+        return max_len
+
+    def init_cache(self, batch_size: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        adt = cfg.activation_dtype
+        cache: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+        for si, seg in enumerate(self.segments):
+            seg_c: Dict[str, Any] = {}
+            if cfg.has_attention:
+                C = self._seg_cache_capacity(seg, max_len)
+                G = self.plan.padded_kv if not self.plan.kv_replicated else self.plan.kv_heads
+                hd = cfg.head_dim_
+                seg_c["k"] = jnp.zeros((seg.count, batch_size, G, C, hd), adt)
+                seg_c["v"] = jnp.zeros((seg.count, batch_size, G, C, hd), adt)
+            if cfg.has_ssm:
+                st = mamba_init_state(cfg, batch_size, adt)
+                seg_c["conv"] = jnp.broadcast_to(st["conv"][None], (seg.count,) + st["conv"].shape)
+                seg_c["ssm"] = jnp.broadcast_to(st["ssm"][None], (seg.count,) + st["ssm"].shape)
+            cache[f"seg{si}"] = seg_c
+        return cache
+
+    def cache_axes(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        ax: Dict[str, Any] = {"len": ()}
+        kv_ax = "kv_heads" if (self.plan and not self.plan.kv_replicated) else None
+        for si, seg in enumerate(self.segments):
+            seg_a: Dict[str, Any] = {}
+            if cfg.has_attention:
+                seg_a["k"] = ("layers", "batch", kv_ax, None, None)
+                seg_a["v"] = ("layers", "batch", kv_ax, None, None)
+            if cfg.has_ssm:
+                seg_a["conv"] = ("layers", "batch", None, "inner")
+                seg_a["ssm"] = ("layers", "batch", "inner", None)
+            ax[f"seg{si}"] = seg_a
+        return ax
+
+    def prefill(self, params, batch, max_len: Optional[int] = None) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Full-sequence forward that also builds the decode cache.
+
+        Returns logits for the LAST position only (what serving samples
+        from) — materializing (B, 32k, V) prefill logits is pure waste."""
+        cfg = self.cfg
+        hidden, _, seeds, n_prefix = self.forward(params, batch, collect_seed=True, return_hidden=True)
+        logits = self._logits(params, hidden[:, -1:, :])[:, 0]
+        # sequence length actually processed:
+        if cfg.family == "audio":
+            S = batch["features"].shape[1]
+            B = batch["features"].shape[0]
+        else:
+            S = batch["tokens"].shape[1] + n_prefix
+            B = batch["tokens"].shape[0]
+        max_len = max_len or S
+        cache = self.init_cache(B, max_len)
+        cache["len"] = jnp.asarray(S, jnp.int32)
+        for si, seg in enumerate(self.segments):
+            seed = seeds[si]
+            seg_c = cache[f"seg{si}"]
+            if cfg.has_attention and "kv" in seed:
+                k, v = seed["kv"]  # (Lseg, B, G, S, hd)
+                C = seg_c["k"].shape[3]
+                if S >= C:
+                    # rolling layout: token t lands in slot t % C
+                    last_k = k[..., S - C :, :]
+                    last_v = v[..., S - C :, :]
+                    slots = (S - C + jnp.arange(C)) % C
+                    seg_c["k"] = jnp.zeros_like(seg_c["k"]).at[..., slots, :].set(last_k.astype(seg_c["k"].dtype))
+                    seg_c["v"] = jnp.zeros_like(seg_c["v"]).at[..., slots, :].set(last_v.astype(seg_c["v"].dtype))
+                else:
+                    seg_c["k"] = seg_c["k"].at[..., :S, :].set(k.astype(seg_c["k"].dtype))
+                    seg_c["v"] = seg_c["v"].at[..., :S, :].set(v.astype(seg_c["v"].dtype))
+            if cfg.has_ssm and "mamba" in seed:
+                seg_c["conv"] = seed["mamba"]["conv"].astype(seg_c["conv"].dtype)
+                seg_c["ssm"] = seed["mamba"]["ssm"]
+            cache[f"seg{si}"] = seg_c
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """One decoding step. tokens: (B,) int32. Returns (logits (B, V'), cache)."""
+        cfg = self.cfg
+        adt = cfg.activation_dtype
+        x = jnp.take(params["embed"].astype(adt), tokens, axis=0)  # (B, d)
+        x = shard(x, "batch", None)
+        clen = cache["len"]
+        new_cache: Dict[str, Any] = {"len": clen + 1}
+        for si, seg in enumerate(self.segments):
+            seg_params = _slice_layers(params["layers"], seg.start, seg.count)
+            seg_c = cache[f"seg{si}"]
+
+            def body(h, xs, _seg=seg):
+                lp, lc = xs
+                h, updates = block_decode(
+                    lp, h, lc, clen, cfg, self.plan, window=_seg.window,
+                    inv_freq=self.inv_freq, ep_size=self.ep_size,
+                )
+                return h, updates
+
+            x, updates = lax.scan(body, x, (seg_params, seg_c))
+            new_cache[f"seg{si}"] = updates
+        logits = self._logits(params, x[:, None, :])[:, 0]
+        return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    # import configs lazily so registration happens on first use
+    import repro.configs  # noqa: F401
+
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,1 @@
+from repro.optim.optimizer import OptConfig, adamw_update, init_opt_state, lr_at_step

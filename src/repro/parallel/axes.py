@@ -1,0 +1,90 @@
+"""Logical-axis sharding rules (MaxText-style), applied via a context.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "ff", "inner", "vocab", "expert", "kv_heads").  The launcher
+installs a rule set mapping logical names to mesh axes for the current
+(mesh, shape) combination; outside any context the hints are no-ops, so the
+same model code runs single-device (smoke tests) and SPMD (dry-run/train).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, AxisVal]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: Dict[str, AxisVal], mesh: Optional[Mesh] = None):
+    old = (current_rules(), current_mesh())
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = old
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: Optional[Dict[str, AxisVal]] = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    return P(*(rules.get(a) if a is not None else None for a in axes))
+
+
+def shard(x, *axes: Optional[str]):
+    """Apply a sharding hint if rules are installed; identity otherwise."""
+    rules = current_rules()
+    mesh = current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = spec_for(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_specs(axes_tree, rules: Optional[Dict[str, AxisVal]] = None):
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    rules = rules if rules is not None else (current_rules() or {})
+    return jax.tree.map(
+        lambda axes: spec_for(axes, rules),
+        axes_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(a, (str, type(None))) for a in v),
+    )
+
+
+# Default rule sets ---------------------------------------------------------
+
+
+def make_rules(
+    *,
+    multi_pod: bool,
+    batch_shardable: bool = True,
+    kv_heads_shardable: bool = True,
+    fsdp: bool = True,
+    seq_shard: bool = False,
+) -> Dict[str, AxisVal]:
+    dp: AxisVal = (("pod", "data") if multi_pod else ("data",)) if batch_shardable else None
+    return {
+        "batch": dp,
+        "seq": ("data",) if seq_shard else None,
+        "embed": "data" if fsdp else None,
+        "heads": "model",
+        "kv_heads": "model" if kv_heads_shardable else None,
+        "ff": "model",
+        "inner": "model",
+        "vocab": "model",
+        "expert": "data",
+        "layers": None,
+    }

@@ -1,0 +1,129 @@
+"""Fault tolerance and straggler mitigation for the training loop.
+
+Three mechanisms, composable and individually tested:
+
+* **checkpoint/restart** — the supervisor owns a CheckpointManager; on any
+  step exception it restores the latest complete checkpoint (possibly onto
+  a *different* mesh — elastic) and replays from there.  The deterministic
+  data pipeline guarantees replayed batches are identical.
+
+* **straggler detection** — per-step wall times per partition feed an EWMA;
+  a partition slower than ``straggler_factor`` x median is flagged and the
+  paper's equalizer (``rebalance_from_measurements``) computes new work
+  weights.  This is literally section 5.6 run online: a straggler is a
+  device class whose calibrated throughput just dropped.
+
+* **step retry** — transient failures (preemption signals, network blips —
+  simulated via FailureInjector) retry the same step up to ``max_retries``
+  before escalating to restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.load_balance import rebalance_from_measurements
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests: fail step N with exc E."""
+
+    def __init__(self, schedule: Optional[Dict[int, str]] = None):
+        self.schedule = dict(schedule or {})
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.schedule and step not in self.fired:
+            self.fired.add(step)
+            kind = self.schedule[step]
+            raise RuntimeError(f"injected failure at step {step}: {kind}")
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """EWMA step timing + straggler flags over named partitions."""
+
+    alpha: float = 0.2
+    straggler_factor: float = 1.5
+    ewma: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def update(self, times: Dict[str, float]) -> List[str]:
+        for k, t in times.items():
+            prev = self.ewma.get(k)
+            self.ewma[k] = t if prev is None else (1 - self.alpha) * prev + self.alpha * t
+        med = float(np.median(list(self.ewma.values())))
+        return [k for k, v in self.ewma.items() if med > 0 and v > self.straggler_factor * med]
+
+    def rebalance(self, counts: Sequence[int], order: Sequence[str]) -> np.ndarray:
+        times = [self.ewma[k] for k in order]
+        return rebalance_from_measurements(counts, times)
+
+
+class TrainSupervisor:
+    """Runs (step_fn, state) with retry + checkpoint-restart.
+
+    step_fn: (state, step, batch) -> (state, metrics)
+    save_fn: (step, state) -> None        (checkpoint)
+    restore_fn: () -> (step, state)       (latest checkpoint)
+    batch_fn: (step) -> batch             (deterministic pipeline)
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        batch_fn: Callable,
+        save_fn: Callable,
+        restore_fn: Callable,
+        *,
+        ckpt_every: int = 50,
+        max_retries: int = 1,
+        injector: Optional[FailureInjector] = None,
+        on_metrics: Optional[Callable] = None,
+    ):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.injector = injector
+        self.on_metrics = on_metrics
+        self.timer = StepTimer()
+        self.restarts = 0
+        self.retries = 0
+
+    def run(self, state, start_step: int, n_steps: int):
+        step = start_step
+        end = start_step + n_steps
+        while step < end:
+            batch = self.batch_fn(step)
+            attempts = 0
+            while True:
+                try:
+                    if self.injector is not None:
+                        self.injector.maybe_fail(step)
+                    t0 = time.perf_counter()
+                    state, metrics = self.step_fn(state, step, batch)
+                    dt = time.perf_counter() - t0
+                    break
+                except Exception:  # noqa: BLE001 — retry then restore
+                    attempts += 1
+                    if attempts <= self.max_retries:
+                        self.retries += 1
+                        continue
+                    # unrecoverable for this incarnation: restore + replay
+                    self.restarts += 1
+                    step, state = self.restore_fn()
+                    batch = self.batch_fn(step)
+                    attempts = 0
+            stragglers = self.timer.update({"global": dt})
+            if self.on_metrics is not None:
+                self.on_metrics(step, metrics, dt, stragglers)
+            step += 1
+            if step % self.ckpt_every == 0:
+                self.save_fn(step, state)
+        return step, state

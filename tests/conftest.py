@@ -1,0 +1,33 @@
+import jax
+
+# f64 for the DG physics tests; LM smoke configs set their dtypes explicitly.
+# NOTE: no xla_force_host_platform_device_count here — tests see 1 real
+# device; multi-device tests spawn subprocesses with their own XLA_FLAGS.
+jax.config.update("jax_enable_x64", True)
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 4, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with fake devices; returns stdout.
+    Raises on nonzero exit (assertion failures propagate)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True, timeout=timeout
+    )
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_with_devices

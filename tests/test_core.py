@@ -1,0 +1,153 @@
+"""Core nested-partition library: invariants, load balancing, cost models."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_nested_partition,
+    face_neighbors,
+    hierarchical_splice,
+    morton_order,
+    rebalance_from_measurements,
+    solve_multiway,
+    solve_two_way,
+    splice,
+    surface_faces,
+)
+from repro.core.cost_model import (
+    DGWorkModel,
+    offload_volume_bytes,
+    shared_face_bytes,
+    stampede_node_models,
+    transfer_time_fn,
+)
+from repro.core.topology import STAMPEDE_MIC, STAMPEDE_SNB_SOCKET
+
+grids = st.tuples(st.integers(2, 6), st.integers(2, 6), st.integers(2, 6))
+
+
+@given(grids)
+@settings(max_examples=20, deadline=None)
+def test_morton_is_permutation(grid):
+    order = morton_order(grid)
+    K = int(np.prod(grid))
+    assert sorted(order.tolist()) == list(range(K))
+
+
+@given(st.integers(1, 500), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_splice_conserves(n, p):
+    offs = splice(n, n_parts=p)
+    sizes = np.diff(offs)
+    assert sizes.sum() == n and (sizes >= 0).all()
+    assert sizes.max() - sizes.min() <= 1  # equal weights -> near-equal parts
+
+
+@given(st.integers(10, 300), st.lists(st.floats(0.1, 10), min_size=2, max_size=5))
+@settings(max_examples=30, deadline=None)
+def test_splice_proportional(n, weights):
+    offs = splice(n, weights)
+    sizes = np.diff(offs)
+    assert sizes.sum() == n
+    ideal = n * np.asarray(weights) / np.sum(weights)
+    assert np.abs(sizes - ideal).max() < 1.0 + 1e-9  # largest-remainder bound
+
+
+@given(grids, st.integers(1, 6), st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_nested_partition_invariants(grid, n_nodes, frac):
+    K = int(np.prod(grid))
+    if K < n_nodes:
+        n_nodes = K
+    part = build_nested_partition(grid, n_nodes, accel_fraction=frac)
+    part.validate()  # every element exactly once; accel subset of interior
+    # boundary definition: face neighbour on another node
+    nbr = face_neighbors(grid)
+    for e in range(K):
+        nbrs = nbr[e][nbr[e] >= 0]
+        is_b = (part.node_of[nbrs] != part.node_of[e]).any() if len(nbrs) else False
+        assert bool(part.boundary_mask[e]) == bool(is_b)
+
+
+def test_morton_locality_beats_random():
+    """Morton splices should cut fewer faces than random assignment."""
+    grid = (8, 8, 8)
+    nbr = face_neighbors(grid)
+    part = build_nested_partition(grid, 8)
+    cut_m = sum(
+        surface_faces(np.isin(np.arange(512), p.elements), nbr) for p in part.nodes
+    )
+    rng = np.random.default_rng(0)
+    assign = rng.integers(0, 8, 512)
+    cut_r = sum(surface_faces(assign == i, nbr) for i in range(8))
+    assert cut_m < 0.6 * cut_r, (cut_m, cut_r)
+
+
+def test_hierarchical_splice_nests():
+    levels = hierarchical_splice(100, [[1, 1], [1, 1, 1]])
+    assert levels[0][0][-1] == 100
+    total = sum(int(o[-1] - o[0]) for o in levels[1])
+    assert total == 100
+
+
+# ---------------------------------------------------------------------------
+# Load balancing (paper section 5.6)
+# ---------------------------------------------------------------------------
+
+
+def test_stampede_split_matches_paper():
+    """The published optimum: K_MIC/K_CPU ~= 1.6 on the paper's node."""
+    t_cpu, t_mic, xfer = stampede_node_models(order=7)
+    res = solve_two_way(t_cpu, t_mic, 8192, transfer=xfer)
+    assert 1.45 <= res.ratio <= 1.85, res.ratio
+    assert res.imbalance < 1.01  # both sides finish together
+
+
+def test_two_way_caps_at_interior():
+    t_cpu, t_mic, xfer = stampede_node_models(order=7)
+    res = solve_two_way(t_cpu, t_mic, 8192, transfer=xfer, K_accel_max=1000)
+    assert res.counts[1] == 1000  # accelerator capped by interior count
+
+
+@given(st.integers(100, 5000), st.lists(st.floats(0.2, 5.0), min_size=2, max_size=6))
+@settings(max_examples=25, deadline=None)
+def test_multiway_equalizes(K, speeds):
+    fns = [lambda k, s=s: k / s for s in speeds]
+    res = solve_multiway(fns, K)
+    assert sum(res.counts) == K
+    times = [fns[i](res.counts[i]) for i in range(len(speeds))]
+    # near-equal finish (integer rounding slack)
+    assert max(times) - min(times) <= max(1.0 / min(speeds), 0.02 * max(times))
+
+
+@given(st.floats(1.1, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_two_way_monotone_in_speed(speedup):
+    t1 = lambda k: k * 1.0
+    t2 = lambda k: k / speedup
+    res = solve_two_way(t1, t2, 1000)
+    assert res.counts[1] > res.counts[0]  # faster device gets more work
+    res_faster = solve_two_way(t1, lambda k: k / (speedup * 2), 1000)
+    assert res_faster.counts[1] >= res.counts[1]
+
+
+def test_rebalance_from_measurements_shifts_work():
+    w = rebalance_from_measurements([100, 100], [2.0, 1.0], smoothing=1.0)
+    assert w[1] > w[0]  # the 2x-faster partition gets more
+    np.testing.assert_allclose(w.sum(), 1.0)
+
+
+def test_surface_vs_volume_transfer():
+    """The paper's core argument: interior-offload face bytes << task-offload
+    volume bytes (O(K^2/3) vs O(K))."""
+    K, order = 8192, 7
+    assert shared_face_bytes(K, order) < 0.05 * offload_volume_bytes(K, order)
+
+
+def test_workmodel_scaling():
+    w7, w3 = DGWorkModel(order=7), DGWorkModel(order=3)
+    assert w7.total_flops_per_element() > w3.total_flops_per_element() * 8
+    # per-step transfer is monotone in K
+    xfer = transfer_time_fn(7)
+    assert xfer(1000) < xfer(4000) and xfer(0) == 0.0

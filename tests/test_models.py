@@ -1,0 +1,169 @@
+"""Per-arch smoke tests + model-math correctness (decode==prefill, MoE,
+mamba, head plans).  All on reduced same-family configs, 1 CPU device."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.shapes import SHAPES, cells_for, smoke_config
+from repro.models.common import ModelConfig, make_head_plan
+from repro.models.zoo import LM, get_config, list_archs
+
+ALL_ARCHS = [
+    "qwen2.5-32b", "granite-3-8b", "stablelm-12b", "qwen2-7b", "llava-next-34b",
+    "hymba-1.5b", "mixtral-8x22b", "olmoe-1b-7b", "falcon-mamba-7b", "hubert-xlarge",
+]
+
+
+def _smoke_batch(cfg, key, B=2, S=64):
+    kt, kl, kp = jax.random.split(key, 3)
+    if cfg.family == "audio":
+        return {
+            "features": jax.random.normal(kp, (B, S, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        ni = cfg.frontend_tokens
+        return {
+            "tokens": jax.random.randint(kt, (B, S - ni), 0, cfg.vocab_size),
+            "patches": jax.random.normal(kp, (B, ni, 1024), jnp.float32),
+            "labels": jax.random.randint(kl, (B, S - ni), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size),
+    }
+
+
+def test_registry_has_all_assigned_archs():
+    assert set(ALL_ARCHS) <= set(list_archs())
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one grad step; shapes + finiteness."""
+    cfg = smoke_config(get_config(arch))
+    lm = LM(cfg, ep_size=2 if cfg.n_experts else 1)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    loss, metrics = lm.loss(params, batch)
+    assert jnp.isfinite(loss), arch
+    logits, _, _, npre = lm.forward(params, batch)
+    B = 2
+    S_tot = (batch.get("tokens").shape[1] if "tokens" in batch else batch["features"].shape[1]) + npre
+    assert logits.shape == (B, S_tot, cfg.padded_vocab)
+    assert jnp.isfinite(logits).all()
+    grads = jax.grad(lambda p: lm.loss(p, batch)[0])(params)
+    gn = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)) ** 0.5
+    assert jnp.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "mixtral-8x22b", "falcon-mamba-7b", "hymba-1.5b", "olmoe-1b-7b", "llava-next-34b"])
+def test_decode_matches_prefill(arch):
+    cfg = smoke_config(get_config(arch))
+    lm = LM(cfg, ep_size=2 if cfg.n_experts else 1)
+    params = lm.init(jax.random.PRNGKey(0))
+    B, S = 2, 48
+    if cfg.family == "vlm":
+        ni = cfg.frontend_tokens
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S - ni), 0, cfg.vocab_size)
+        patches = jax.random.normal(jax.random.PRNGKey(2), (B, ni, 1024), jnp.float32)
+        full_batch = {"tokens": toks, "patches": patches}
+        n_txt = S - ni
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        full_batch = {"tokens": toks}
+        n_txt = S
+    full_logits, _, _, npre = lm.forward(params, full_batch)
+    S0 = n_txt - 6
+    pre_batch = dict(full_batch, tokens=toks[:, :S0])
+    logits_p, cache = lm.prefill(params, pre_batch, max_len=S + npre + 8)
+    errs = [float(jnp.abs(logits_p - full_logits[:, npre + S0 - 1]).max())]
+    for t in range(S0, n_txt):
+        logits_d, cache = lm.decode_step(params, cache, toks[:, t])
+        errs.append(float(jnp.abs(logits_d - full_logits[:, npre + t]).max()))
+    assert max(errs) < 3e-3, (arch, errs)
+
+
+def test_encoder_only_skips_decode_cells():
+    cells = {c.shape.name: c for c in cells_for(get_config("hubert-xlarge"))}
+    assert cells["decode_32k"].skip and cells["long_500k"].skip
+    assert not cells["train_4k"].skip and not cells["prefill_32k"].skip
+
+
+def test_long500k_skip_rules():
+    for arch, should_run in [
+        ("qwen2.5-32b", False), ("granite-3-8b", False), ("stablelm-12b", False),
+        ("qwen2-7b", False), ("llava-next-34b", False),
+        ("mixtral-8x22b", True), ("hymba-1.5b", True), ("falcon-mamba-7b", True),
+        ("olmoe-1b-7b", False),
+    ]:
+        c = {c.shape.name: c for c in cells_for(get_config(arch))}["long_500k"]
+        assert (c.skip is None) == should_run, (arch, c.skip)
+
+
+def test_head_plans_cover_zoo():
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        if not cfg.has_attention:
+            continue
+        plan = make_head_plan(cfg.n_heads, cfg.n_kv_heads, 16)
+        assert plan.padded_q % 16 == 0
+        if not plan.kv_replicated:
+            assert plan.padded_kv % 16 == 0 or 16 % plan.padded_kv == 0
+            # every logical q head maps to its original kv head
+            q_per_g = cfg.n_heads // cfg.n_kv_heads
+            for h in range(cfg.n_heads):
+                slot = plan.q_slot_of_logical[h]
+                kv_padded = plan.q_to_kv[slot]
+                assert plan.kv_dup[kv_padded] == h // q_per_g, (arch, h)
+
+
+def test_padded_heads_are_exact():
+    """A tp_size-padded model must equal the unpadded (tp=1) model."""
+    base = smoke_config(get_config("qwen2.5-32b")).replace(n_heads=5, n_kv_heads=1, head_dim=16)
+    lm1 = LM(base.replace(tp_size=1))
+    lm4 = LM(base.replace(tp_size=4))
+    p1 = lm1.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, base.vocab_size)
+    # copy p1 weights into the padded layout of lm4
+    p4 = lm4.init(jax.random.PRNGKey(0))
+    plan1, plan4 = lm1.plan, lm4.plan
+    hd = base.head_dim_
+
+    def remap_q(w1, w4):
+        w4 = np.array(w4)
+        w4[:] = 0.0
+        for h in range(base.n_heads):
+            s1, s4 = plan1.q_slot_of_logical[h], plan4.q_slot_of_logical[h]
+            w4[:, s4 * hd : (s4 + 1) * hd] = np.asarray(w1[:, s1 * hd : (s1 + 1) * hd])
+        return jnp.asarray(w4)
+
+    def remap_o(w1, w4):
+        w4 = np.array(w4)
+        w4[:] = 0.0
+        for h in range(base.n_heads):
+            s1, s4 = plan1.q_slot_of_logical[h], plan4.q_slot_of_logical[h]
+            w4[s4 * hd : (s4 + 1) * hd, :] = np.asarray(w1[s1 * hd : (s1 + 1) * hd, :])
+        return jnp.asarray(w4)
+
+    import copy
+    p4 = jax.tree.map(lambda x: x, p1)  # same non-attention weights
+    lay1 = p1["layers"]["attn"]
+    p4["layers"] = dict(p1["layers"])
+    p4["layers"]["attn"] = dict(lay1)
+    p4["layers"]["attn"]["wq"] = jnp.stack([remap_q(lay1["wq"][l], np.zeros((base.d_model, plan4.padded_q * hd))) for l in range(base.n_layers)])
+    p4["layers"]["attn"]["wo"] = jnp.stack([remap_o(lay1["wo"][l], np.zeros((plan4.padded_q * hd, base.d_model))) for l in range(base.n_layers)])
+    if base.qkv_bias:
+        def remap_b(b1, n4):
+            b4 = np.zeros(n4)
+            for h in range(base.n_heads):
+                s1, s4 = plan1.q_slot_of_logical[h], plan4.q_slot_of_logical[h]
+                b4[s4 * hd : (s4 + 1) * hd] = np.asarray(b1[s1 * hd : (s1 + 1) * hd])
+            return jnp.asarray(b4)
+        p4["layers"]["attn"]["bq"] = jnp.stack([remap_b(lay1["bq"][l], plan4.padded_q * hd) for l in range(base.n_layers)])
+    l1, _, _, _ = lm1.forward(p1, {"tokens": toks})
+    l4, _, _, _ = lm4.forward(p4, {"tokens": toks})
+    np.testing.assert_allclose(l1, l4, rtol=2e-4, atol=2e-4)

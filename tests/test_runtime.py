@@ -1,0 +1,79 @@
+"""Fault tolerance: retry, checkpoint-restore replay, straggler detection."""
+
+import numpy as np
+import pytest
+
+from repro.runtime import FailureInjector, StepTimer, TrainSupervisor
+from repro.core.load_balance import rebalance_from_measurements
+
+
+def _make_harness(fail_at=None, max_retries=0):
+    """Tiny deterministic 'training': state = sum of batches consumed."""
+    saves = {}
+    log = []
+
+    def batch_fn(step):
+        return float(step + 1)
+
+    def step_fn(state, step, batch):
+        if fail_at is not None:
+            injector.maybe_fail(step)
+        return state + batch, {"state": state + batch}
+
+    def save_fn(step, state):
+        saves[step] = state
+
+    def restore_fn():
+        if not saves:
+            return 0, 0.0
+        s = max(saves)
+        return s, saves[s]
+
+    injector = FailureInjector({fail_at: "preempt"} if fail_at is not None else {})
+    sup = TrainSupervisor(
+        step_fn, batch_fn, save_fn, restore_fn,
+        ckpt_every=3, max_retries=max_retries, injector=injector,
+        on_metrics=lambda step, m, dt, st: log.append(step),
+    )
+    return sup, saves, log
+
+
+def test_supervisor_plain_run():
+    sup, saves, log = _make_harness()
+    step, state = sup.run(0.0, 0, 10)
+    assert step == 10 and state == sum(range(1, 11))
+    assert sup.restarts == 0
+
+
+def test_supervisor_retry_absorbs_transient():
+    sup, saves, log = _make_harness(fail_at=4, max_retries=1)
+    step, state = sup.run(0.0, 0, 10)
+    assert state == sum(range(1, 11))
+    assert sup.retries == 1 and sup.restarts == 0
+
+
+def test_supervisor_restore_replays_identically():
+    """With no retries, a failure forces restore + replay; the deterministic
+    pipeline must land on the exact same final state."""
+    sup, saves, log = _make_harness(fail_at=7, max_retries=0)
+    step, state = sup.run(0.0, 0, 12)
+    assert sup.restarts == 1
+    assert state == sum(range(1, 13))  # bit-identical replay
+
+
+def test_steptimer_flags_stragglers():
+    t = StepTimer(alpha=1.0, straggler_factor=1.4)
+    flags = t.update({"n0": 1.0, "n1": 1.0, "n2": 1.0, "n3": 2.0})
+    assert flags == ["n3"]
+    w = t.rebalance([100, 100, 100, 100], ["n0", "n1", "n2", "n3"])
+    assert w[3] < w[0]  # the straggler gets less work
+
+
+def test_rebalance_equalizes_predicted_times():
+    counts = np.array([100, 100])
+    times = np.array([1.0, 3.0])
+    w = rebalance_from_measurements(counts, times, smoothing=1.0)
+    new_counts = 200 * w
+    thr = counts / times
+    predicted = new_counts / thr
+    assert abs(predicted[0] - predicted[1]) / predicted.max() < 1e-6
