@@ -9,17 +9,19 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.dg.operators import dg_rhs, extract_face, stress, surface_rhs, volume_rhs
+from repro.dg.operators import extract_face, surface_rhs, volume_rhs
 from repro.dg.rk import lsrk45_step
 from repro.dg.solver import gaussian_pulse, make_two_tree_solver
 
 PAPER_SHARES = {"volume_loop": 40, "int_flux": 25, "interp_q": 8, "lift+rk": 18, "other": 9}
 
 
-def run(grid=(8, 8, 8), order=5):
+def run(grid=(8, 8, 8), order=5, smoke=False):
+    if smoke:
+        grid, order = (4, 4, 4), 3
+    reps = 1 if smoke else 5
     s = make_two_tree_solver(grid=grid, order=order, extent=(2.0, 1.0, 1.0), dtype="float32")
     q = gaussian_pulse(s, center=(0.5, 0.5, 0.5)).astype(jnp.float32)
 
@@ -29,11 +31,11 @@ def run(grid=(8, 8, 8), order=5):
     rhs = jax.jit(s.rhs)
     rk = jax.jit(lambda q, r: lsrk45_step(q, r, lambda x: x, 1e-3))
 
-    t_vol = timeit(vol, q)
-    t_surf = timeit(surf, q)
-    t_interp = timeit(interp, q)
-    t_rk = timeit(rk, q, jnp.zeros_like(q))
-    t_rhs = timeit(rhs, q)
+    t_vol = timeit(vol, q, reps=reps)
+    t_surf = timeit(surf, q, reps=reps)
+    t_interp = timeit(interp, q, reps=reps)
+    t_rk = timeit(rk, q, jnp.zeros_like(q), reps=reps)
+    t_rhs = timeit(rhs, q, reps=reps)
 
     total = t_vol + t_surf + t_interp + t_rk
     emit("fig4_1/volume_loop", t_vol * 1e6, f"{100*t_vol/total:.0f}% (paper ~40%)")

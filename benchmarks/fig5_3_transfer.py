@@ -17,8 +17,10 @@ from benchmarks.common import emit
 from repro.core.topology import DCN_LINK, ICI_LINK, STAMPEDE_PCI
 
 
-def run():
-    for mb in (1, 8, 64, 256):
+def run(smoke=False):
+    sizes = (1, 8) if smoke else (1, 8, 64, 256)
+    model_sizes = (1, 8) if smoke else (1, 64, 256)
+    for mb in sizes:
         arr = np.random.default_rng(0).standard_normal(mb * 131072).astype(np.float64)  # mb MiB
         t0 = time.perf_counter()
         d = jax.device_put(arr)
@@ -26,7 +28,7 @@ def run():
         _ = np.asarray(d)
         dt = time.perf_counter() - t0
         emit(f"fig5_3/measured_roundtrip_{mb}MiB", dt * 1e6, f"{2*mb/1024/dt:.2f} GiB/s eff")
-    for mb in (1, 64, 256):
+    for mb in model_sizes:
         nbytes = mb * 2**20
         emit(f"fig5_3/model_pci_{mb}MiB", STAMPEDE_PCI.time(nbytes) * 1e6, "paper PCI 6GB/s")
         emit(f"fig5_3/model_ici_{mb}MiB", ICI_LINK.time(nbytes) * 1e6, "v5e ICI 50GB/s/link")

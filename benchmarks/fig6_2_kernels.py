@@ -11,16 +11,17 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.dg.operators import deriv, stress, volume_rhs
+from repro.dg.operators import deriv, volume_rhs
 from repro.dg.solver import gaussian_pulse, make_two_tree_solver
 from repro.models.attention import flash_attention, naive_attention
 
 
-def run():
-    s = make_two_tree_solver(grid=(8, 4, 4), order=5, extent=(2.0, 1.0, 1.0), dtype="float32")
+def run(smoke=False):
+    reps = 1 if smoke else 3
+    grid, order = ((4, 2, 2), 3) if smoke else ((8, 4, 4), 5)
+    s = make_two_tree_solver(grid=grid, order=order, extent=(2.0, 1.0, 1.0), dtype="float32")
     q = gaussian_pulse(s, center=(0.5, 0.5, 0.5)).astype(jnp.float32)
 
     # volume_loop: per-axis unfused derivatives (baseline) vs fused rhs term
@@ -31,33 +32,33 @@ def run():
         return outs
 
     vol_opt = jax.jit(lambda q: volume_rhs(q, s.D, s.metrics, s.rho_j, s.lam_j, s.mu_j))
-    t_b = timeit(vol_baseline, q, reps=3)
-    t_o = timeit(vol_opt, q, reps=3)
+    t_b = timeit(vol_baseline, q, reps=reps)
+    t_o = timeit(vol_opt, q, reps=reps)
     emit("fig6_2/volume_baseline", t_b * 1e6, "")
     emit("fig6_2/volume_optimized", t_o * 1e6, f"{t_b/t_o:.2f}x (paper ~2x)")
 
     # attention (the LM hot-spot): naive O(S^2) materialized vs blocked flash
-    B, H, S, D = 1, 8, 1024, 64
+    B, H, S, D = (1, 2, 256, 64) if smoke else (1, 8, 1024, 64)
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     qa = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
     ka = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
     va = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
     naive = jax.jit(lambda q, k, v: naive_attention(q, k, v, causal=True))
     flash = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True, block_q=256, block_k=256))
-    t_n = timeit(naive, qa, ka, va, reps=3)
-    t_f = timeit(flash, qa, ka, va, reps=3)
+    t_n = timeit(naive, qa, ka, va, reps=reps)
+    t_f = timeit(flash, qa, ka, va, reps=reps)
     emit("fig6_2/attention_naive", t_n * 1e6, "materialized scores")
     emit("fig6_2/attention_flash", t_f * 1e6, f"{t_n/t_f:.2f}x, O(S*Bk) memory")
 
     # SWA long-context: full sweep vs windowed slicing
-    S2, W = 8192, 512
+    S2, W = (1024, 128) if smoke else (8192, 512)
     q2 = jax.random.normal(ks[0], (1, 2, S2, 64), jnp.float32)
     k2 = jax.random.normal(ks[1], (1, 2, S2, 64), jnp.float32)
     v2 = jax.random.normal(ks[2], (1, 2, S2, 64), jnp.float32)
     full = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True, block_q=256, block_k=256))
     swa = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True, window=W, block_q=256, block_k=256))
-    t_full = timeit(full, q2, k2, v2, reps=3)
-    t_swa = timeit(swa, q2, k2, v2, reps=3)
+    t_full = timeit(full, q2, k2, v2, reps=reps)
+    t_swa = timeit(swa, q2, k2, v2, reps=reps)
     emit("fig6_2/attn8k_full", t_full * 1e6, "")
     emit("fig6_2/attn8k_swa512", t_swa * 1e6, f"{t_full/t_swa:.2f}x via window slicing")
 

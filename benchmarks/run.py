@@ -1,11 +1,13 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark harness: every paper table/figure, plus kernel microbenches.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig4_1 ... # subset
+  PYTHONPATH=src python -m benchmarks.run                    # all, full size
+  PYTHONPATH=src python -m benchmarks.run fig4_1 ...         # subset
+  PYTHONPATH=src python -m benchmarks.run --smoke            # tiny shapes,
+                                                             # 1 rep, CI-safe
 """
 
-import sys
+import argparse
 
 
 def main() -> None:
@@ -24,10 +26,20 @@ def main() -> None:
         "table6_1": table6_1_speedup.run,
         "fig6_2": fig6_2_kernels.run,
     }
-    picked = sys.argv[1:] or list(suites)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*", default=[],
+                    help=f"subset of suites (default: all of {', '.join(suites)})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 rep — finishes in well under 2 minutes")
+    args = ap.parse_args()
+
+    unknown = [s for s in args.suites if s not in suites]
+    if unknown:
+        ap.error(f"unknown suites {unknown}; choose from {list(suites)}")
+    picked = args.suites or list(suites)
     print("name,us_per_call,derived")
     for name in picked:
-        suites[name]()
+        suites[name](smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core.cost_model import stampede_calibration, stampede_node_models
@@ -25,7 +24,10 @@ from repro.core.load_balance import solve_two_way
 from repro.dg.solver import gaussian_pulse, make_two_tree_solver
 
 
-def run(grid=(8, 8, 4), order=4, n_ranks=8):
+def run(grid=(8, 8, 4), order=4, n_ranks=8, smoke=False):
+    if smoke:
+        grid, order = (4, 4, 2), 3
+    reps = 1 if smoke else 3
     s = make_two_tree_solver(grid=grid, order=order, extent=(2.0, 1.0, 1.0), dtype="float32")
     q = gaussian_pulse(s, center=(0.5, 0.5, 0.5)).astype(jnp.float32)
     K = s.mesh.K
@@ -37,8 +39,8 @@ def run(grid=(8, 8, 4), order=4, n_ranks=8):
             return s.rhs(qq)
 
     fused = jax.jit(s.rhs)
-    t_base = timeit(baseline, q, reps=2, warmup=1)
-    t_opt = timeit(fused, q, reps=3)
+    t_base = timeit(baseline, q, reps=1 if smoke else 2, warmup=1)
+    t_opt = timeit(fused, q, reps=reps)
     emit("table6_1/measured_baseline_rhs", t_base * 1e6, "eager op-by-op (unfused)")
     emit("table6_1/measured_optimized_rhs", t_opt * 1e6, "fused whole-node jit")
     emit("table6_1/measured_speedup", t_base / t_opt * 100, f"{t_base/t_opt:.2f}x (fusion/vectorization axis)")

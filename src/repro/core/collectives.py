@@ -24,7 +24,9 @@ from jax import lax
 
 
 def _axis_size(axis_name) -> int:
-    return lax.axis_size(axis_name)
+    from repro.jax_compat import axis_size
+
+    return axis_size(axis_name)
 
 
 def _pad_to_multiple(x: jnp.ndarray, mult: int) -> Tuple[jnp.ndarray, int]:

@@ -165,8 +165,16 @@ def rebalance_from_measurements(
         raise ValueError("measured times must be positive")
     throughput = counts / times  # items / s
     if (throughput <= 0).any():
+        pos = throughput[throughput > 0]
+        if len(pos) == 0:
+            # nothing measured anywhere (all partitions idle): keep prior /
+            # uniform weights rather than dividing by an empty mean
+            prior = np.ones_like(throughput)
+            if prev_weights is not None:
+                prior = np.asarray(prev_weights, dtype=np.float64)
+            return prior / prior.sum()
         # a partition with zero work: give it the mean throughput as a prior
-        throughput = np.where(throughput > 0, throughput, throughput[throughput > 0].mean())
+        throughput = np.where(throughput > 0, throughput, pos.mean())
     new_w = throughput / throughput.sum()
     if prev_weights is not None:
         prev = np.asarray(prev_weights, dtype=np.float64)

@@ -1,0 +1,83 @@
+"""Version tolerance for the jax APIs this repo relies on.
+
+The codebase targets the modern spellings — ``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType`` — which do
+not exist on older jax (0.4.x) where the same machinery lives under
+``jax.experimental.shard_map`` with ``check_rep`` / ``auto`` parameters.
+Importing the helpers from here instead of guessing the installed version is
+what lets the tier-1 suite and CI run on any jax the container ships.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # modern jax
+    AxisType = jax.sharding.AxisType
+    HAS_AXIS_TYPES = True
+except AttributeError:  # jax <= 0.4.x: meshes have no axis types
+    class AxisType:  # noqa: D401 - sentinel mirroring jax.sharding.AxisType
+        """Placeholder so call sites can name axis types unconditionally."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+
+def axis_size(axis_name) -> int:
+    """Static mesh-axis size inside ``shard_map`` on any jax version.
+
+    Old jax has no ``lax.axis_size``; ``psum`` of a Python constant is its
+    long-standing implementation (constant-folded at trace time)."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on any jax version.
+
+    On old jax the argument is dropped (meshes are implicitly Auto — the
+    same semantics the modern default provides)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if hasattr(jax, "make_mesh"):
+        if axis_types is not None and HAS_AXIS_TYPES:
+            try:
+                return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types, **kwargs)
+            except TypeError:  # make_mesh exists but predates axis_types
+                pass
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+    # jax without make_mesh at all: build the Mesh by hand
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+
+    devs = mesh_utils.create_device_mesh(tuple(axis_shapes), devices=devices)
+    return Mesh(devs, tuple(axis_names))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, axis_names=None, **kwargs):
+    """``jax.shard_map`` on any jax version.
+
+    Maps the modern ``check_vma`` to the legacy ``check_rep`` (both disable
+    replication checking) and ``axis_names`` (manual axes) to the legacy
+    complement ``auto`` (every mesh axis NOT named stays automatic)."""
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

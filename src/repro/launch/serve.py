@@ -1,8 +1,16 @@
 """Batched serving driver: prefill a prompt batch, decode with greedy
 sampling, report per-token latency/throughput.
 
+The request batch is spliced across ``--partitions`` virtual partitions by
+an online ``repro.runtime.executor.NestedPartitionExecutor`` instead of the
+old ad-hoc static split: a calibration pass times each partition's
+prefill+decode, the executor re-solves the row split (paper section 5.6 run
+online), and the serving pass uses the calibrated counts.  With
+``--partitions 1`` (default) the flow is the classic single-batch path, but
+still driven through the executor's step API.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+      --batch 4 --prompt-len 64 --gen 32 --partitions 2
 """
 
 from __future__ import annotations
@@ -19,6 +27,7 @@ from repro.data.pipeline import _rng
 from repro.launch.mesh import debug_mesh, make_production_mesh
 from repro.models.zoo import LM, get_config
 from repro.parallel.steps import make_serve_step, make_shardings
+from repro.runtime import NestedPartitionExecutor
 
 
 def main():
@@ -29,6 +38,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--partitions", type=int, default=1,
+                    help="virtual partitions the request batch is spliced over")
+    ap.add_argument("--calib-gen", type=int, default=4,
+                    help="decode steps per partition in the calibration pass")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -46,33 +59,87 @@ def main():
 
     g = _rng(args.seed, 0)
     prompts = g.integers(0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
-    batch = {"tokens": jnp.asarray(prompts)}
 
     sh = make_shardings(lm, mesh, kind="decode", batch_shardable=False)
     serve_step = jax.jit(make_serve_step(lm, sh), donate_argnums=(1,))
     prefill = jax.jit(lambda p, b: lm.prefill(p, b, max_len=args.prompt_len + args.gen + 8))
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab_size, logits, -jnp.inf)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
+    def decode_rows(rows: np.ndarray, n_gen: int):
+        """Prefill + greedy-decode a sub-batch; returns
+        (gen, prefill_seconds, decode_seconds)."""
+        t0 = time.time()
+        logits, cache = prefill(params, {"tokens": jnp.asarray(rows)})
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab_size, logits, -jnp.inf)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t_prefill = time.time() - t0
+        out = [np.asarray(tok)]
+        t1 = time.time()
+        for _ in range(n_gen - 1):
+            tok, cache = serve_step(params, cache, tok)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        return np.stack(out, axis=1), t_prefill, time.time() - t1
 
-    out_tokens = [np.asarray(tok)]
-    t1 = time.time()
-    for _ in range(args.gen - 1):
-        tok, cache = serve_step(params, cache, tok)
-        out_tokens.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t1
+    P = max(1, min(args.partitions, args.batch))
+    executor = NestedPartitionExecutor(args.batch, P, bucket=1, smoothing=1.0)
 
-    gen = np.stack(out_tokens, axis=1)
+    warmed = set()
+
+    def warm(offsets):
+        """Compile every sub-batch shape before it is timed: 3 steps cover
+        prefill plus both decode cache layouts (the donated cache changes
+        layout after the first serve_step call)."""
+        for p in range(P):
+            rows = prompts[offsets[p]:offsets[p + 1]]
+            if len(rows) and len(rows) not in warmed:
+                decode_rows(rows, 3)
+                warmed.add(len(rows))
+
+    if P > 1:
+        # calibration pass: time each partition on the current (equal) split,
+        # feed the equalizer, re-solve the row counts
+        times = np.zeros(P)
+        offs = executor.offsets
+        warm(offs)
+        for p in range(P):
+            rows = prompts[offs[p]:offs[p + 1]]
+            if len(rows) == 0:
+                continue
+            _, tp, td = decode_rows(rows, max(2, args.calib_gen))
+            times[p] = tp + td
+        executor.observe(times)
+        executor.rebalance()
+        print(f"calibration times: {[round(float(t) * 1e3, 2) for t in times]} ms")
+        print(f"calibrated split: counts={executor.counts.tolist()} "
+              f"(round {executor.round}, predicted makespan "
+              f"{executor.predicted_makespan() * 1e3:.1f}ms)")
+        warm(executor.offsets)  # the re-solved counts may be new shapes
+
+    # serving pass on the (re)calibrated splice; contiguous splice keeps the
+    # original row order under concatenation
+    parts, per_part = [], []
+    t_prefill_all, t_decode_all = 0.0, 0.0
+    offs = executor.offsets
+    for p in range(P):
+        rows = prompts[offs[p]:offs[p + 1]]
+        if len(rows) == 0:
+            continue
+        gen_p, tp, td = decode_rows(rows, args.gen)
+        parts.append(gen_p)
+        per_part.append((p, int(len(rows)), tp + td))
+        t_prefill_all += tp
+        t_decode_all += td
+    gen = np.concatenate(parts, axis=0)
+
     assert gen.shape == (args.batch, args.gen)
     assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
-    per_tok = t_decode / max(1, args.gen - 1)
-    print(f"arch={cfg.arch_id} batch={args.batch} prefill({args.prompt_len} tok)={t_prefill*1e3:.1f}ms "
-          f"decode={per_tok*1e3:.2f} ms/step throughput={args.batch/per_tok:.1f} tok/s")
+    per_tok = t_decode_all / max(1, args.gen - 1)
+    print(f"arch={cfg.arch_id} batch={args.batch} partitions={P} "
+          f"prefill({args.prompt_len} tok)={t_prefill_all * 1e3:.1f}ms "
+          f"decode={per_tok * 1e3:.2f} ms/step throughput={args.batch / per_tok:.1f} tok/s")
+    for p, n, dt in per_part:
+        print(f"  partition {p}: rows={n} wall={dt * 1e3:.1f}ms")
     print("sample:", gen[0, :16].tolist())
 
 

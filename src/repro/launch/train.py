@@ -7,6 +7,14 @@ pipeline, async sharded checkpoints, and the fault-tolerant supervisor
 (reduced config, 1 device); on a pod the same file drives the production
 mesh.
 
+An online ``repro.runtime.executor.NestedPartitionExecutor`` rides along
+through the supervisor (the paper's section-5.6 equalizer run at runtime):
+wall times feed it each step and the re-solved data-parallel row counts are
+reported at the end (``--rebalance-every`` cadence, ``--plan-cache``
+persistence).  On this synchronous single-process path the attribution is
+uniform, so the split is advisory until per-device step times exist; the
+asymmetric execution lives in ``BlockedDGEngine`` / ``launch.serve``.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --smoke \
       --steps 30 --fail-at 12 --ckpt-every 5      # exercises restart
@@ -16,7 +24,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 from typing import Any, Dict
 
@@ -25,12 +32,12 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.shapes import SHAPES, ShapeSpec, smoke_config
-from repro.data import SyntheticPipeline, make_batch
+from repro.data import make_batch
 from repro.launch.mesh import debug_mesh, make_production_mesh
 from repro.models.zoo import LM, get_config
 from repro.optim import OptConfig, init_opt_state
 from repro.parallel.steps import accum_layout, make_shardings, make_train_step
-from repro.runtime import FailureInjector, TrainSupervisor
+from repro.runtime import FailureInjector, NestedPartitionExecutor, TrainSupervisor
 
 
 def build(args):
@@ -56,7 +63,7 @@ def build(args):
         out_shardings=(sh.params, sh.opt, None),
         donate_argnums=(0, 1),
     )
-    return cfg, shape, lm, jitted, accum, micro
+    return cfg, shape, lm, jitted, accum, micro, dp
 
 
 def main():
@@ -74,11 +81,15 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, default=None, help="inject a failure at step N")
+    ap.add_argument("--rebalance-every", type=int, default=10,
+                    help="online-executor rebalance cadence (steps)")
+    ap.add_argument("--plan-cache", default=None,
+                    help="persist solved batch splits under this directory")
     ap.add_argument("--metrics-out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg, shape, lm, jitted, accum, micro = build(args)
+    cfg, shape, lm, jitted, accum, micro, dp = build(args)
     key = jax.random.PRNGKey(args.seed)
     params = lm.init(key)
     opt_state = init_opt_state(params)
@@ -123,11 +134,21 @@ def main():
         if step % max(1, args.steps // 10) == 0 or step < 3:
             print(json.dumps(rec), flush=True)
 
+    # online equalizer riding along via the supervisor: uniform wall-time
+    # attribution here (advisory split); per-device times would make it real
+    executor = NestedPartitionExecutor(
+        shape.global_batch,
+        dp,
+        bucket=1,
+        rebalance_every=args.rebalance_every,
+        plan_cache_dir=args.plan_cache,
+    )
     sup = TrainSupervisor(
         step_fn, batch_fn, save_fn, restore_fn,
         ckpt_every=args.ckpt_every,
         injector=FailureInjector({args.fail_at: "node-loss"}) if args.fail_at else None,
         on_metrics=on_metrics,
+        executor=executor,
     )
     t0 = time.time()
     final_step, (params, opt_state) = sup.run((params, opt_state), start_step, args.steps)
@@ -138,6 +159,9 @@ def main():
     losses = [m["loss"] for m in metrics_log]
     print(f"done: steps={final_step} wall={wall:.1f}s loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"restarts={sup.restarts} retries={sup.retries}", flush=True)
+    print(f"executor: dp={executor.n_partitions} rounds={executor.round} "
+          f"counts={executor.counts.tolist()} "
+          f"predicted_makespan={executor.predicted_makespan():.4f}s", flush=True)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             for m in metrics_log:

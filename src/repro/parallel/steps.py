@@ -17,8 +17,7 @@ Sharding specs for jit come from the logical-axes trees
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +27,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.collectives import compressed_psum
 from repro.models.common import ModelConfig
 from repro.models.zoo import LM
-from repro.optim import OptConfig, adamw_update, init_opt_state
-from repro.parallel.axes import logical_axis_rules, make_rules, spec_for, tree_specs
+from repro.optim import OptConfig, adamw_update
+from repro.parallel.axes import logical_axis_rules, make_rules, tree_specs
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +196,9 @@ def make_train_step(
         pod = lambda tree: jax.tree.map(
             lambda s: _pod_only(s.spec), tree, is_leaf=lambda x: isinstance(x, NamedSharding)
         )
-        f = jax.shard_map(
+        from repro.jax_compat import shard_map
+
+        f = shard_map(
             podwise_step,
             mesh=sh.mesh,
             in_specs=(pod(sh.params), pod(sh.opt), pod(sh.batch)),

@@ -1,1 +1,21 @@
+from repro.runtime.executor import (
+    BlockedDGEngine,
+    CalibrationReport,
+    NestedPartitionExecutor,
+    Plan,
+    PlanCache,
+    bucket_counts,
+)
 from repro.runtime.fault_tolerance import FailureInjector, StepTimer, TrainSupervisor
+
+__all__ = [
+    "BlockedDGEngine",
+    "CalibrationReport",
+    "NestedPartitionExecutor",
+    "Plan",
+    "PlanCache",
+    "bucket_counts",
+    "FailureInjector",
+    "StepTimer",
+    "TrainSupervisor",
+]

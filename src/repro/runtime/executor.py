@@ -1,0 +1,742 @@
+"""Online auto-rebalancing nested-partition executor — paper section 5.6
+closed at *runtime*.
+
+The paper's payoff is not a static split but a calibrated one: it solves
+
+    T_acc(K_acc) = T_host(K - K_acc) + Transfer(K_acc)
+
+from *measured* kernel times so that neither side idles.  This module wires
+the repo's existing pieces (``core.load_balance``, ``core.partition``) into
+the measure -> re-solve -> re-splice loop that makes a heterogeneous run
+track hardware reality:
+
+1. **calibrate** — a short phase that times boundary / interior / transfer
+   work per partition (``BlockedDGEngine.calibrate`` for the DG workload, or
+   injected ``time_models`` for simulated fleets);
+2. **solve** — measured step times feed ``rebalance_from_measurements`` /
+   ``solve_multiway`` to re-solve the asymmetric split;
+3. **resplice** — the ``NestedPartition`` index arrays are rebuilt and the
+   device assignment re-spliced *without recompiling the interior kernels*:
+   per-partition chunk sizes are padded to ``bucket`` multiples, so the jit
+   cache is keyed on a small set of padded shapes that survive rebalances;
+4. **drive** — a step-driver API (``drive`` / ``observe`` /
+   ``maybe_rebalance``) adopted by ``repro.dg.partitioned``,
+   ``repro.launch.train`` and ``repro.launch.serve``.
+
+Solved splits are cached (hash of mesh/topology/weights -> counts) and
+persisted through ``repro.checkpoint``, so a restarted job starts from the
+last calibrated split instead of the naive one.  A straggler-injection hook
+(``inject_straggler``) multiplies observed times for one partition, which is
+how tests exercise convergence: a 2x straggler must be rebalanced to within
+10% of the common-finish-time optimum in a few rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.load_balance import (
+    rebalance_from_measurements,
+    solve_multiway,
+)
+from repro.core.partition import NestedPartition, build_nested_partition, splice
+
+__all__ = [
+    "Plan",
+    "PlanCache",
+    "CalibrationReport",
+    "NestedPartitionExecutor",
+    "BlockedDGEngine",
+    "bucket_counts",
+]
+
+
+# ---------------------------------------------------------------------------
+# Bucketed counts — jit-cache-friendly chunk sizes
+# ---------------------------------------------------------------------------
+
+
+def bucket_counts(counts: Sequence[int], bucket: int) -> np.ndarray:
+    """Round per-partition counts to multiples of ``bucket`` while conserving
+    the total (largest-remainder on bucket units).  The sub-bucket tail goes
+    to the largest partition; its padded shape is unchanged, so the set of
+    compiled chunk shapes stays small across rebalances."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if bucket <= 1 or total == 0:
+        return counts.copy()
+    units = total // bucket
+    if units == 0:
+        out = np.zeros_like(counts)
+        out[int(np.argmax(counts))] = total
+        return out
+    ideal = units * counts / total
+    base = np.floor(ideal).astype(np.int64)
+    rem = units - int(base.sum())
+    order = np.argsort(-(ideal - base), kind="stable")
+    base[order[:rem]] += 1
+    out = base * bucket
+    out[int(np.argmax(counts))] += total - int(out.sum())
+    assert out.sum() == total and (out >= 0).all()
+    return out
+
+
+def pad_to_bucket(n: int, bucket: int) -> int:
+    """Padded (compiled) size for a chunk of ``n`` items."""
+    if bucket <= 1 or n == 0:
+        return n
+    return int(-(-n // bucket) * bucket)
+
+
+# ---------------------------------------------------------------------------
+# Plans and the persistent plan cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A solved split: normalized work weights and bucketed counts."""
+
+    key: str
+    weights: np.ndarray  # (P,) normalized
+    counts: np.ndarray  # (P,) integer, bucketed, sums to K
+    predicted_times: np.ndarray  # (P,) seconds under the current belief
+    round: int = 0
+
+    @property
+    def makespan(self) -> float:
+        return float(self.predicted_times.max()) if len(self.predicted_times) else 0.0
+
+
+def plan_key(
+    grid_dims: Optional[tuple],
+    n_items: int,
+    n_partitions: int,
+    bucket: int,
+    accel_fraction: float,
+    weights: Sequence[float],
+) -> str:
+    """Stable hash of mesh/topology/weights identifying a solved split."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = w / w.sum()
+    payload = json.dumps(
+        {
+            "grid": list(grid_dims) if grid_dims else None,
+            "K": int(n_items),
+            "P": int(n_partitions),
+            "bucket": int(bucket),
+            "accel_fraction": round(float(accel_fraction), 6),
+            "weights": [round(float(x), 6) for x in w],
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+class PlanCache:
+    """hash(mesh/topology/weights) -> solved split, persisted atomically via
+    ``repro.checkpoint`` (one checkpoint directory per key, pruned to
+    ``keep``).  A ``plan_latest`` marker records the last applied key so a
+    restarted executor resumes from the calibrated split, not the naive
+    one."""
+
+    def __init__(self, root: str, keep: int = 8):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _dir(self, key: str) -> str:
+        return os.path.join(self.root, f"plan_{key}")
+
+    def _marker(self) -> str:
+        return os.path.join(self.root, "plan_latest")
+
+    def mark_latest(self, key: str) -> None:
+        tmp = self._marker() + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(key)
+        os.replace(tmp, self._marker())
+
+    def get_latest(self, n_partitions: int) -> Optional[Plan]:
+        try:
+            with open(self._marker()) as f:
+                key = f.read().strip()
+        except FileNotFoundError:
+            return None
+        return self.get(key, n_partitions) if key else None
+
+    def _prune(self) -> None:
+        dirs = [
+            os.path.join(self.root, d)
+            for d in os.listdir(self.root)
+            if d.startswith("plan_") and os.path.isdir(os.path.join(self.root, d))
+        ]
+        if len(dirs) <= self.keep:
+            return
+        dirs.sort(key=os.path.getmtime)
+        import shutil
+
+        for d in dirs[: len(dirs) - self.keep]:
+            shutil.rmtree(d, ignore_errors=True)
+
+    def get(self, key: str, n_partitions: int) -> Optional[Plan]:
+        from repro.checkpoint import latest_step, restore
+
+        d = self._dir(key)
+        if latest_step(d) is None:
+            self.misses += 1
+            return None
+        template = {
+            "weights": np.zeros(n_partitions),
+            "counts": np.zeros(n_partitions, dtype=np.int64),
+            "predicted_times": np.zeros(n_partitions),
+        }
+        tree, manifest = restore(d, template)
+        self.hits += 1
+        return Plan(
+            key=key,
+            weights=np.asarray(tree["weights"], dtype=np.float64),
+            counts=np.asarray(tree["counts"], dtype=np.int64),
+            predicted_times=np.asarray(tree["predicted_times"], dtype=np.float64),
+            round=int(manifest["extra"].get("round", 0)),
+        )
+
+    def put(self, plan: Plan) -> None:
+        from repro.checkpoint import save
+
+        tree = {
+            "weights": plan.weights,
+            "counts": plan.counts,
+            "predicted_times": plan.predicted_times,
+        }
+        save(self._dir(plan.key), 0, tree, extra_meta={"key": plan.key, "round": plan.round})
+        self._prune()
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationReport:
+    """Per-partition seconds for the three classes of work the paper's
+    balance equation distinguishes (section 5.6)."""
+
+    boundary_s: np.ndarray  # face-flux work (the host keeps the network)
+    interior_s: np.ndarray  # volume work (what the accelerator absorbs)
+    transfer_s: np.ndarray  # slow-link gather of the halo / shared faces
+
+    @property
+    def step_s(self) -> np.ndarray:
+        return self.boundary_s + self.interior_s + self.transfer_s
+
+    def summary(self) -> str:
+        rows = []
+        for p in range(len(self.boundary_s)):
+            rows.append(
+                f"p{p}: boundary={self.boundary_s[p] * 1e3:.2f}ms "
+                f"interior={self.interior_s[p] * 1e3:.2f}ms "
+                f"transfer={self.transfer_s[p] * 1e3:.2f}ms"
+            )
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+
+class NestedPartitionExecutor:
+    """Closes the paper's calibration loop at runtime.
+
+    Two operating modes share the same solve/resplice machinery:
+
+    * **measured** — ``observe`` is fed real per-partition step seconds (from
+      ``BlockedDGEngine`` timing, or a synchronous driver attributing wall
+      time);
+    * **modeled** — ``time_models[p]`` is a callable ``T_p(k) -> seconds``
+      (e.g. from ``repro.core.cost_model``); ``simulated_times`` evaluates it
+      on the current counts.  This is how virtual heterogeneous fleets and
+      CI-sized convergence tests run on a homogeneous container.
+
+    ``inject_straggler(p, factor)`` multiplies partition ``p``'s *observed*
+    times — the test hook for convergence: the executor must re-splice work
+    away from the straggler until the predicted makespan is within ``rtol``
+    of the common-finish-time optimum.
+    """
+
+    def __init__(
+        self,
+        n_items: int,
+        n_partitions: int,
+        *,
+        grid_dims: Optional[tuple] = None,
+        bucket: int = 16,
+        smoothing: float = 0.5,
+        ewma_alpha: float = 1.0,
+        rebalance_every: int = 10,
+        time_models: Optional[Sequence[Callable[[float], float]]] = None,
+        plan_cache_dir: Optional[str] = None,
+        initial_weights: Optional[Sequence[float]] = None,
+        accel_fraction: float = 0.0,
+    ):
+        if grid_dims is not None:
+            expected = int(np.prod(grid_dims))
+            if n_items != expected:
+                raise ValueError(f"n_items={n_items} != prod(grid_dims)={expected}")
+        self.n_items = int(n_items)
+        self.n_partitions = int(n_partitions)
+        self.grid_dims = tuple(grid_dims) if grid_dims is not None else None
+        self.bucket = int(bucket)
+        self.smoothing = float(smoothing)
+        self.ewma_alpha = float(ewma_alpha)
+        self.rebalance_every = int(rebalance_every)
+        self.time_models = list(time_models) if time_models is not None else None
+        if self.time_models is not None and len(self.time_models) != n_partitions:
+            raise ValueError("need one time model per partition")
+        self.plan_cache = PlanCache(plan_cache_dir) if plan_cache_dir else None
+        self.accel_fraction = float(accel_fraction)
+
+        self._factors = np.ones(self.n_partitions)
+        self._ewma: Optional[np.ndarray] = None
+        self._obs_counts: Optional[np.ndarray] = None
+        self._step = 0
+        self.round = 0
+        self.partition: Optional[NestedPartition] = None
+        self.offsets: Optional[np.ndarray] = None
+        self._resplice_hooks: List[Callable[[], None]] = []
+        self.history: List[Plan] = []
+
+        w0 = np.asarray(
+            initial_weights if initial_weights is not None else np.ones(n_partitions),
+            dtype=np.float64,
+        )
+        self.weights = w0 / w0.sum()
+        self.counts = bucket_counts(np.diff(splice(self.n_items, self.weights)), self.bucket)
+        if self.plan_cache is not None and initial_weights is None:
+            # restart path: resume the last calibrated split instead of naive
+            latest = self.plan_cache.get_latest(self.n_partitions)
+            if latest is not None and int(latest.counts.sum()) == self.n_items:
+                self.weights = latest.weights
+                self.counts = latest.counts.copy()
+        self._resplice()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def chunk_pads(self) -> tuple:
+        """Padded (compiled) chunk sizes — the jit-cache key set."""
+        return tuple(pad_to_bucket(int(c), self.bucket) for c in self.counts)
+
+    def rates(self) -> np.ndarray:
+        """items/s per partition under the current belief (measured EWMA if
+        available, else the time models, else uniform)."""
+        if self._ewma is not None:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                r = self._obs_counts / self._ewma
+            good = np.isfinite(r) & (r > 0)
+            if not good.any():
+                return np.ones(self.n_partitions)
+            r = np.where(good, r, r[good].mean())
+            return r
+        if self.time_models is not None:
+            k = max(1, self.n_items // self.n_partitions)
+            t = np.array([max(f(k), 1e-30) for f in self.time_models])
+            return k / t
+        return np.ones(self.n_partitions)
+
+    def predicted_makespan(self) -> float:
+        """max_p T_p(counts_p) under the current belief."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            t = self.counts / self.rates()
+        return float(np.nanmax(np.where(self.counts > 0, t, 0.0)))
+
+    def optimal_makespan(self) -> float:
+        """Common-finish-time optimum for the current belief (continuous
+        relaxation of ``solve_multiway``)."""
+        rates = self.rates()
+        fns = [lambda k, r=r: k / r for r in rates]
+        res = solve_multiway(fns, self.n_items, integer=False)
+        return res.makespan
+
+    # -- test / simulation hooks -------------------------------------------
+
+    def inject_straggler(self, partition: int, factor: float) -> None:
+        """Multiply partition's observed times by ``factor`` (test hook)."""
+        self._factors[partition] = float(factor)
+
+    def clear_stragglers(self) -> None:
+        self._factors[:] = 1.0
+
+    def simulated_times(self, counts: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Evaluate the time models on ``counts`` (default: current split).
+        Straggler factors are NOT applied here — ``observe`` applies them, so
+        a simulated measure->observe round counts them exactly once."""
+        if self.time_models is None:
+            raise RuntimeError("no time models configured")
+        counts = self.counts if counts is None else np.asarray(counts)
+        return np.array([self.time_models[p](int(counts[p])) for p in range(self.n_partitions)])
+
+    # -- calibration / measurement -----------------------------------------
+
+    def calibrate(
+        self,
+        measure_fn: Optional[Callable[[], np.ndarray]] = None,
+        n_steps: int = 3,
+    ) -> CalibrationReport:
+        """Short calibration phase: run ``n_steps`` measurements and seed the
+        EWMA.  ``measure_fn`` returns per-partition step seconds (e.g.
+        ``BlockedDGEngine.measure_block_times``); without it the time models
+        are used."""
+        reports = []
+        for _ in range(max(1, n_steps)):
+            t = np.asarray(measure_fn() if measure_fn is not None else self.simulated_times())
+            self.observe(t)
+            reports.append(t)
+        med = np.median(np.stack(reports), axis=0)
+        # without a component-resolved engine the whole step is 'interior'
+        zeros = np.zeros_like(med)
+        return CalibrationReport(boundary_s=zeros, interior_s=med, transfer_s=zeros)
+
+    def observe(self, times: Sequence[float]) -> None:
+        """Record measured per-partition step seconds (straggler factors are
+        applied here — the single injection point)."""
+        t = np.asarray(times, dtype=np.float64) * self._factors
+        if self._ewma is None or self.ewma_alpha >= 1.0:
+            self._ewma = t.copy()
+        else:
+            self._ewma = self.ewma_alpha * t + (1.0 - self.ewma_alpha) * self._ewma
+        # throughput must be computed against the counts these times were
+        # measured under, not the counts a later resplice installs
+        self._obs_counts = self.counts.astype(np.float64)
+
+    def observe_total(self, dt: float) -> None:
+        """Synchronous-step attribution: under a barrier every partition's
+        step time equals the wall time (SPMD semantics).  Gives no skew
+        signal by itself — stragglers enter via injection or per-partition
+        measurement."""
+        self.observe(np.full(self.n_partitions, float(dt)))
+
+    # -- solve / resplice ---------------------------------------------------
+
+    def solve(self, weights: Sequence[float]) -> Plan:
+        """Weights -> bucketed counts (plan-cache aware)."""
+        w = np.asarray(weights, dtype=np.float64)
+        w = w / w.sum()
+        key = plan_key(
+            self.grid_dims, self.n_items, self.n_partitions, self.bucket,
+            self.accel_fraction, w,
+        )
+        if self.plan_cache is not None:
+            cached = self.plan_cache.get(key, self.n_partitions)
+            if cached is not None and int(cached.counts.sum()) == self.n_items:
+                return cached
+        counts = bucket_counts(np.diff(splice(self.n_items, w)), self.bucket)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            predicted = np.where(counts > 0, counts / self.rates(), 0.0)
+        plan = Plan(key=key, weights=w, counts=counts, predicted_times=predicted, round=self.round)
+        if self.plan_cache is not None:
+            self.plan_cache.put(plan)
+        return plan
+
+    def _resplice(self) -> None:
+        """Rebuild index arrays for the current counts.  Interior kernels are
+        NOT recompiled: consumers key their jit caches on ``chunk_pads``."""
+        if self.grid_dims is not None:
+            self.partition = build_nested_partition(
+                self.grid_dims,
+                self.n_partitions,
+                accel_fraction=self.accel_fraction,
+                node_weights=np.maximum(self.counts, 0) if self.counts.sum() else None,
+            )
+            self.offsets = self.partition.offsets
+        else:
+            self.offsets = splice(self.n_items, np.maximum(self.counts, 1e-9))
+        for hook in self._resplice_hooks:
+            hook()
+
+    def apply(self, plan: Plan) -> None:
+        self.weights = plan.weights
+        self.counts = plan.counts.copy()
+        self.history.append(plan)
+        if self.plan_cache is not None:
+            self.plan_cache.mark_latest(plan.key)
+        self._resplice()
+
+    def rebalance(self) -> Plan:
+        """One calibration-loop round: measured EWMA -> equalizer -> new
+        bucketed split -> resplice."""
+        if self._ewma is None:
+            raise RuntimeError("rebalance before any observation; run calibrate() first")
+        w = rebalance_from_measurements(
+            np.maximum(self._obs_counts, 0),
+            np.maximum(self._ewma, 1e-30),
+            smoothing=self.smoothing,
+            prev_weights=self.weights,
+        )
+        self.round += 1
+        plan = dataclasses.replace(self.solve(w), round=self.round)
+        self.apply(plan)
+        return plan
+
+    def maybe_rebalance(self, step: Optional[int] = None) -> Optional[Plan]:
+        """Step-driver hook: rebalance every ``rebalance_every`` steps
+        (``rebalance_every <= 0`` disables the schedule)."""
+        step = self._step if step is None else step
+        if self.rebalance_every <= 0 or self._ewma is None or step == 0:
+            return None
+        if step % self.rebalance_every:
+            return None
+        return self.rebalance()
+
+    def advance(self, n_steps: int = 1) -> Optional[Plan]:
+        """Advance the step counter by ``n_steps`` and rebalance if the
+        schedule fires — the one protocol external step drivers use."""
+        self._step += int(n_steps)
+        return self.maybe_rebalance(self._step)
+
+    def run_until_balanced(
+        self,
+        measure_fn: Optional[Callable[[], np.ndarray]] = None,
+        rtol: float = 0.10,
+        max_rounds: int = 8,
+    ) -> int:
+        """Measure -> rebalance until the predicted makespan is within
+        ``rtol`` of the common-finish-time optimum; returns rounds used."""
+        for r in range(1, max_rounds + 1):
+            t = np.asarray(measure_fn() if measure_fn is not None else self.simulated_times())
+            self.observe(t)
+            self.rebalance()
+            if self.predicted_makespan() <= (1.0 + rtol) * self.optimal_makespan():
+                return r
+        return max_rounds
+
+    # -- step driver --------------------------------------------------------
+
+    def drive(
+        self,
+        state,
+        step_fn: Callable,
+        n_steps: int,
+        times_fn: Optional[Callable[["NestedPartitionExecutor", float], np.ndarray]] = None,
+    ):
+        """Run ``n_steps`` of ``step_fn(state) -> state``, observing wall time
+        (or ``times_fn(self, dt)`` per-partition seconds) and rebalancing on
+        schedule.  This is the API ``launch.train`` / ``launch.serve`` adopt."""
+        for _ in range(n_steps):
+            t0 = time.perf_counter()
+            state = step_fn(state)
+            dt = time.perf_counter() - t0
+            if times_fn is not None:
+                self.observe(np.asarray(times_fn(self, dt)))
+            else:
+                self.observe_total(dt)
+            self.advance()
+        return state
+
+
+# ---------------------------------------------------------------------------
+# Blocked DG engine — per-partition execution with halos
+# ---------------------------------------------------------------------------
+
+
+class BlockedDGEngine:
+    """Executes a ``DGSolver`` rhs as per-partition element blocks with halo
+    gathers — the executor's heterogeneous execution engine.
+
+    Each partition's chunk (own elements + face halo) is padded to a
+    ``bucket`` multiple, so after a resplice the per-block jit cache is hit
+    whenever the padded size has been seen before; the full-field arrays
+    never change shape.  The rhs is mathematically the flat solver's rhs
+    restricted to each block (identical per-element arithmetic), so the
+    partitioned run matches the flat run bitwise — the partition is a
+    reordering, never an approximation.
+    """
+
+    def __init__(self, solver, executor: NestedPartitionExecutor):
+        import jax
+
+        if executor.grid_dims is None:
+            raise ValueError("BlockedDGEngine needs a grid-backed executor")
+        if tuple(executor.grid_dims) != tuple(solver.mesh.grid):
+            raise ValueError(
+                f"executor grid {executor.grid_dims} != solver grid {solver.mesh.grid}"
+            )
+        self.solver = solver
+        self.executor = executor
+        self.pads_seen: set = set()
+        self._blocks: list = []
+        self._jax = jax
+        self._build_jitted()
+        self.rebuild()
+        executor._resplice_hooks.append(self.rebuild)
+
+    # -- jitted kernels (compiled once per padded block size) ---------------
+
+    def _build_jitted(self):
+        import jax
+
+        from repro.dg.operators import surface_rhs, volume_rhs
+
+        s = self.solver
+        D, metrics, lift = s.D, s.metrics, s.lift
+
+        def gather(q, ext_idx):
+            return q[ext_idx]
+
+        def interior(qb, rho, lam, mu):
+            return volume_rhs(qb, D, metrics, rho, lam, mu)
+
+        def boundary(qb, nbr_local, rho, lam, mu, cp, cs):
+            return surface_rhs(qb, nbr_local, lift, rho, lam, mu, cp, cs)
+
+        def block_rhs(q, ext_idx, nbr_local, rho, lam, mu, cp, cs):
+            qb = q[ext_idx]
+            return volume_rhs(qb, D, metrics, rho, lam, mu) + surface_rhs(
+                qb, nbr_local, lift, rho, lam, mu, cp, cs
+            )
+
+        self._gather = jax.jit(gather)
+        self._interior = jax.jit(interior)
+        self._boundary = jax.jit(boundary)
+        self._block_rhs = jax.jit(block_rhs)
+
+    # -- block tables -------------------------------------------------------
+
+    def rebuild(self) -> None:
+        """Re-splice: rebuild per-partition index tables from the executor's
+        current ``NestedPartition``.  No kernel recompiles unless a brand-new
+        padded size appears."""
+        import jax.numpy as jnp
+
+        s = self.solver
+        part = self.executor.partition
+        K = s.mesh.K
+        nbr = s.mesh.neighbors
+        bucket = self.executor.bucket
+        dt = jnp.dtype(s.dtype)
+        blocks = []
+        for node in part.nodes:
+            own = np.asarray(node.elements, dtype=np.int64)
+            if len(own) == 0:
+                blocks.append(None)
+                continue
+            in_own = np.zeros(K, dtype=bool)
+            in_own[own] = True
+            nn = nbr[own].ravel()
+            nn = nn[nn >= 0]
+            halo = np.unique(nn[~in_own[nn]])
+            ext = np.concatenate([own, halo])
+            pad = pad_to_bucket(len(ext), bucket)
+            self.pads_seen.add(pad)
+            ext_pad = np.concatenate([ext, np.zeros(pad - len(ext), dtype=np.int64)])
+            lut = np.full(K, -1, dtype=np.int64)
+            lut[ext] = np.arange(len(ext))
+            nbr_ext = nbr[ext_pad]
+            # own rows: every real neighbour is in ext by construction, so
+            # lut resolves it; -1 (physical boundary) is preserved.  halo and
+            # pad rows may point outside ext -> -1; their output is dumped.
+            nbr_local = np.where(nbr_ext >= 0, lut[np.clip(nbr_ext, 0, None)], -1)
+            scat = np.concatenate([own, np.full(pad - len(own), K, dtype=np.int64)])
+            blocks.append(
+                {
+                    "ext": jnp.asarray(ext_pad),
+                    "nbr_local": jnp.asarray(nbr_local),
+                    "scat": jnp.asarray(scat),
+                    "rho": jnp.asarray(s.rho[ext_pad], dt),
+                    "lam": jnp.asarray(s.lam[ext_pad], dt),
+                    "mu": jnp.asarray(s.mu[ext_pad], dt),
+                    "cp": jnp.asarray(np.sqrt((s.lam + 2 * s.mu) / s.rho)[ext_pad], dt),
+                    "cs": jnp.asarray(np.sqrt(s.mu / s.rho)[ext_pad], dt),
+                    "n_own": len(own),
+                }
+            )
+        self._blocks = blocks
+
+    # -- execution ----------------------------------------------------------
+
+    def rhs(self, q):
+        """Full rhs assembled from per-partition block evaluations."""
+        import jax.numpy as jnp
+
+        K = self.solver.mesh.K
+        out = jnp.zeros((K + 1,) + tuple(q.shape[1:]), q.dtype)
+        for b in self._blocks:
+            if b is None:
+                continue
+            rb = self._block_rhs(q, b["ext"], b["nbr_local"], b["rho"], b["lam"],
+                                 b["mu"], b["cp"], b["cs"])
+            out = out.at[b["scat"]].set(rb)
+        return out[:K]
+
+    def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False):
+        """Step driver: LSRK4(5) on the blocked rhs; with ``observe`` the
+        executor gets per-partition timings and rebalances on schedule."""
+        import jax.numpy as jnp
+
+        from repro.dg.rk import lsrk45_step
+
+        dt = dt or self.solver.cfl_dt()
+        res = jnp.zeros_like(q)
+        for _ in range(n_steps):
+            if observe:
+                self.executor.observe(self.measure_block_times(q))
+                self.executor.advance()
+            q, res = lsrk45_step(q, res, self.rhs, dt)
+        return q
+
+    # -- measurement --------------------------------------------------------
+
+    def _time(self, fn, *args, reps: int = 1) -> float:
+        jax = self._jax
+        jax.block_until_ready(fn(*args))  # warmup / compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2]
+
+    def measure_block_times(self, q, reps: int = 1) -> np.ndarray:
+        """Per-partition seconds for one rhs evaluation of each block."""
+        out = np.zeros(len(self._blocks))
+        for p, b in enumerate(self._blocks):
+            if b is None:
+                continue
+            out[p] = self._time(
+                self._block_rhs, q, b["ext"], b["nbr_local"], b["rho"], b["lam"],
+                b["mu"], b["cp"], b["cs"], reps=reps,
+            )
+        return out
+
+    def calibrate(self, q, reps: int = 2) -> CalibrationReport:
+        """The executor's phase (1): time boundary (face flux), interior
+        (volume) and transfer (halo gather) work per partition."""
+        P = len(self._blocks)
+        boundary = np.zeros(P)
+        interior = np.zeros(P)
+        transfer = np.zeros(P)
+        for p, b in enumerate(self._blocks):
+            if b is None:
+                continue
+            transfer[p] = self._time(self._gather, q, b["ext"], reps=reps)
+            qb = self._gather(q, b["ext"])
+            interior[p] = self._time(self._interior, qb, b["rho"], b["lam"], b["mu"], reps=reps)
+            boundary[p] = self._time(
+                self._boundary, qb, b["nbr_local"], b["rho"], b["lam"], b["mu"],
+                b["cp"], b["cs"], reps=reps,
+            )
+        report = CalibrationReport(boundary_s=boundary, interior_s=interior, transfer_s=transfer)
+        self.executor.observe(report.step_s)
+        return report

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -83,7 +83,13 @@ class TrainSupervisor:
         max_retries: int = 1,
         injector: Optional[FailureInjector] = None,
         on_metrics: Optional[Callable] = None,
+        executor=None,
     ):
+        """``executor`` — an optional
+        ``repro.runtime.executor.NestedPartitionExecutor``: each step's wall
+        time is observed and the work split re-solved on its schedule (the
+        paper's section-5.6 equalizer run online; supersedes the ad-hoc
+        StepTimer-only straggler EWMA)."""
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.save_fn = save_fn
@@ -92,6 +98,7 @@ class TrainSupervisor:
         self.max_retries = max_retries
         self.injector = injector
         self.on_metrics = on_metrics
+        self.executor = executor
         self.timer = StepTimer()
         self.restarts = 0
         self.retries = 0
@@ -121,6 +128,9 @@ class TrainSupervisor:
                     batch = self.batch_fn(step)
                     attempts = 0
             stragglers = self.timer.update({"global": dt})
+            if self.executor is not None:
+                self.executor.observe_total(dt)
+                self.executor.maybe_rebalance(step + 1)
             if self.on_metrics is not None:
                 self.on_metrics(step, metrics, dt, stragglers)
             step += 1

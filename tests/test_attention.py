@@ -92,13 +92,14 @@ import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.models.attention import naive_attention, ring_attention
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jax_compat import make_mesh, shard_map
+mesh = make_mesh((4,), ("data",))
 ks = jax.random.split(jax.random.PRNGKey(0), 3)
 q = jax.random.normal(ks[0], (2, 4, 256, 32), jnp.float32)
 k = jax.random.normal(ks[1], (2, 2, 256, 32), jnp.float32)
 v = jax.random.normal(ks[2], (2, 2, 256, 32), jnp.float32)
 for causal in (True, False):
-    f = jax.jit(jax.shard_map(partial(ring_attention, axis_name="data", causal=causal),
+    f = jax.jit(shard_map(partial(ring_attention, axis_name="data", causal=causal),
         mesh=mesh, in_specs=(P(None, None, "data", None),) * 3,
         out_specs=P(None, None, "data", None), check_vma=False))
     np.testing.assert_allclose(f(q, k, v), naive_attention(q, k, v, causal=causal),

@@ -18,8 +18,8 @@ from repro.models.zoo import LM, get_config
 from repro.optim import OptConfig, init_opt_state
 from repro.parallel.steps import make_shardings, make_train_step
 from repro.runtime.elastic import rescale_plan
+from repro.jax_compat import make_mesh
 
-AX = (jax.sharding.AxisType.Auto,)
 cfg = smoke_config(get_config("qwen2-7b")).replace(tp_size=2)
 lm = LM(cfg)
 shape = ShapeSpec("t", 64, 8, "train")
@@ -36,8 +36,8 @@ def run_steps(mesh, params, opt, start, n):
         losses.append(float(m["loss"]))
     return params, opt, losses
 
-mesh_a = jax.make_mesh((2, 2), ("data", "model"), axis_types=AX * 2)
-mesh_b = jax.make_mesh((4,), ("data",), axis_types=AX)
+mesh_a = make_mesh((2, 2), ("data", "model"))
+mesh_b = make_mesh((4,), ("data",))
 
 # uninterrupted reference on mesh A
 p0 = lm.init(jax.random.PRNGKey(0))
@@ -59,7 +59,7 @@ np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
 print("elastic (2,2)->(4,) trajectory matches uninterrupted run")
 
 # shrink to a single device
-mesh_c = jax.make_mesh((1,), ("data",), axis_types=AX)
+mesh_c = make_mesh((1,), ("data",))
 p3, o3, step, _ = rescale_plan(ck, lm, mesh_c)
 _, _, second_c = run_steps(mesh_c, p3, o3, 4, 4)
 np.testing.assert_allclose(first + second_c, ref, rtol=2e-4, atol=2e-4)

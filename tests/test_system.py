@@ -106,7 +106,8 @@ from repro.optim import OptConfig, init_opt_state
 from repro.parallel.steps import accum_layout, make_shardings, make_train_step
 from repro.launch.specs import train_input_specs
 from repro.launch.hlo_analysis import analyze
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.jax_compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = smoke_config(get_config("qwen2-7b")).replace(tp_size=2, dtype="bfloat16")
 lm = LM(cfg)
 shape = ShapeSpec("t", seq_len=64, global_batch=8, kind="train")
