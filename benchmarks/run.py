@@ -31,6 +31,9 @@ def main() -> None:
                     help=f"subset of suites (default: all of {', '.join(suites)})")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, 1 rep — finishes in well under 2 minutes")
+    ap.add_argument("--overlap", choices=["on", "off", "both"], default="both",
+                    help="fig5_3: modeled makespan with the boundary/interior "
+                         "overlap schedule on/off (delta row when 'both')")
     args = ap.parse_args()
 
     unknown = [s for s in args.suites if s not in suites]
@@ -39,7 +42,10 @@ def main() -> None:
     picked = args.suites or list(suites)
     print("name,us_per_call,derived")
     for name in picked:
-        suites[name](smoke=args.smoke)
+        kwargs = {"smoke": args.smoke}
+        if name == "fig5_3":
+            kwargs["overlap"] = args.overlap
+        suites[name](**kwargs)
 
 
 if __name__ == "__main__":

@@ -8,13 +8,21 @@ the next chunk): XLA's latency-hiding scheduler overlaps the DMA with MXU
 work because the two have no data dependence — exactly "interior compute
 over boundary communication".
 
-These run inside ``jax.shard_map``.  ``ring_allgather_matmul`` replaces
-``all_gather -> matmul`` (activation gathering for column-parallel layers);
-``matmul_ring_reducescatter`` replaces ``matmul -> reduce_scatter``
+These run inside ``jax.shard_map``.  ``overlap_map`` is the shared
+compute-over-communication pipeline: round ``i`` computes on the data in
+hand while the communication for round ``i+1`` is issued.  The two matmul
+collectives are thin instantiations of it — ``ring_allgather_matmul``
+replaces ``all_gather -> matmul`` (activation gathering for column-parallel
+layers); ``matmul_ring_reducescatter`` replaces ``matmul -> reduce_scatter``
 (row-parallel layers).  Both are exact (tested against the fused forms).
+``halo_exchange_1d`` is the one-round case consumed by the DG
+``StepSchedule`` (``repro.runtime.schedule``): the exchange is issued, the
+interior phase computes, the correction phase consumes the received halo.
 """
 
 from __future__ import annotations
+
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +33,32 @@ from repro.jax_compat import axis_size as _axis_size
 
 def _perm_shift(axis_size: int, shift: int = 1):
     return [(i, (i + shift) % axis_size) for i in range(axis_size)]
+
+
+def overlap_map(
+    n_rounds: int,
+    compute: Callable[[int, Any], Any],
+    communicate: Callable[[int, Any], Any],
+    carry: Any,
+) -> Any:
+    """Generic interior-over-boundary pipeline (the paper's Fig 5.1 loop).
+
+    Runs ``carry = communicate(i, compute(i, carry))`` for rounds
+    ``0 .. n_rounds-2`` and a final ``compute(n_rounds-1, carry)`` with
+    nothing left to send.  Each round's communication carries the data the
+    NEXT round's compute needs, so the two have no data dependence and the
+    scheduler overlaps the DMA with the compute.
+
+    The loop is unrolled in Python (``n_rounds`` is the — always concrete —
+    ring size), which lets the latency-hiding scheduler see the whole
+    pipeline and keeps per-round ``compute`` free to use round-specific
+    constants.
+    """
+    if n_rounds < 1:
+        raise ValueError(f"need at least one round, got {n_rounds}")
+    for i in range(n_rounds - 1):
+        carry = communicate(i, compute(i, carry))
+    return compute(n_rounds - 1, carry)
 
 
 def ring_allgather_matmul(
@@ -50,20 +84,19 @@ def ring_allgather_matmul(
     shift = -1 if reverse else 1
     perm = _perm_shift(P, shift)
 
-    out = jnp.zeros((m_local * P, n), dtype=jnp.result_type(x_shard.dtype, w.dtype))
+    out0 = jnp.zeros((m_local * P, n), dtype=jnp.result_type(x_shard.dtype, w.dtype))
 
-    def body(i, carry):
+    def compute(i, carry):  # interior: multiply the chunk currently held
         out, chunk = carry
         src = (idx - i * shift) % P  # owner of the chunk we currently hold
-        part = chunk @ w  # interior compute
-        out = lax.dynamic_update_slice(out, part.astype(out.dtype), (src * m_local, 0))
-        chunk = lax.ppermute(chunk, axis_name, perm)  # boundary exchange
+        out = lax.dynamic_update_slice(out, (chunk @ w).astype(out.dtype), (src * m_local, 0))
         return out, chunk
 
-    out, last = lax.fori_loop(0, P - 1, body, (out, x_shard))
-    # last chunk: no further permute needed
-    src = (idx - (P - 1) * shift) % P
-    out = lax.dynamic_update_slice(out, (last @ w).astype(out.dtype), (src * m_local, 0))
+    def communicate(i, carry):  # boundary: next chunk in flight
+        out, chunk = carry
+        return out, lax.ppermute(chunk, axis_name, perm)
+
+    out, _ = overlap_map(P, compute, communicate, (out0, x_shard))
     return out
 
 
@@ -94,18 +127,17 @@ def matmul_ring_reducescatter(
         xs = lax.dynamic_slice(x, (slot * mc, 0), (mc, x.shape[1]))
         return xs @ w_shard
 
-    def body(i, acc):
-        # chunk destined for member (idx + P - 1 - i): compute local partial,
-        # add to the rotating accumulator, pass it along the ring.
+    def compute(i, acc):
+        # chunk destined for member (idx + P - 1 - i): add the local partial
+        # to the rotating accumulator (the final round lands on slot = idx).
         slot = (idx + (P - 1) - i) % P
-        acc = acc + partial_for(slot)
-        acc = lax.ppermute(acc, axis_name, perm)
-        return acc
+        return acc + partial_for(slot)
 
-    acc = jnp.zeros((mc, w_shard.shape[1]), dtype=jnp.result_type(x.dtype, w_shard.dtype))
-    acc = lax.fori_loop(0, P - 1, body, acc)
-    acc = acc + partial_for(idx)
-    return acc
+    def communicate(i, acc):  # pass the accumulator along the ring
+        return lax.ppermute(acc, axis_name, perm)
+
+    acc0 = jnp.zeros((mc, w_shard.shape[1]), dtype=jnp.result_type(x.dtype, w_shard.dtype))
+    return overlap_map(P, compute, communicate, acc0)
 
 
 def halo_exchange_1d(

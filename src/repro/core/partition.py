@@ -139,17 +139,31 @@ def surface_faces(mask: np.ndarray, neighbors: np.ndarray) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class NodePartition:
-    """Level-2 split of one node's Morton-contiguous element chunk."""
+    """Level-2 split of one node's Morton-contiguous element chunk.
+
+    ``boundary`` and ``interior`` are a disjoint cover of ``elements``
+    (validated): boundary elements own at least one halo face, so they are
+    what the step schedule's boundary phase computes and packs; interior
+    elements have no halo dependence, so their volume work overlaps the
+    exchange.  ``halo`` is the remote side of the same cut — the elements
+    other nodes own whose faces touch this chunk, i.e. exactly what the
+    exchange phase must fetch."""
 
     node: int
     elements: np.ndarray  # global element ids, Morton order (this node's chunk)
     boundary: np.ndarray  # subset: shared-face elements (stay on host/CPU)
     host_interior: np.ndarray  # interior elements kept on the host
     accel: np.ndarray  # interior elements offloaded to the accelerator
+    halo: Optional[np.ndarray] = None  # remote elements adjacent to the chunk
 
     @property
     def host(self) -> np.ndarray:
         return np.concatenate([self.boundary, self.host_interior])
+
+    @property
+    def interior(self) -> np.ndarray:
+        """All interior elements (host-kept + offloaded)."""
+        return np.concatenate([self.host_interior, self.accel])
 
     @property
     def n_elements(self) -> int:
@@ -166,6 +180,7 @@ class NestedPartition:
     boundary_mask: np.ndarray  # (K,) bool per global element id
     accel_mask: np.ndarray  # (K,) bool per global element id
     nodes: tuple  # tuple[NodePartition, ...]
+    neighbors: Optional[np.ndarray] = None  # (K, 6) topology the split used
 
     @property
     def n_elements(self) -> int:
@@ -180,6 +195,7 @@ class NestedPartition:
         K = self.n_elements
         assert sorted(self.order.tolist()) == list(range(K)), "order must be a permutation"
         counts = np.zeros(K, dtype=np.int64)
+        neighbors = self.neighbors if self.neighbors is not None else face_neighbors(self.grid_dims)
         for npart in self.nodes:
             counts[npart.elements] += 1
             # host/accel split partitions the node's chunk exactly
@@ -187,6 +203,17 @@ class NestedPartition:
             assert np.array_equal(merged, np.sort(npart.elements))
             # only interior elements are offloaded (paper constraint #1)
             assert not self.boundary_mask[npart.accel].any(), "accel may only own interior elements"
+            # boundary/interior is a disjoint cover of the chunk
+            assert len(np.intersect1d(npart.boundary, npart.interior)) == 0
+            cover = np.sort(np.concatenate([npart.boundary, npart.interior]))
+            assert np.array_equal(cover, np.sort(npart.elements)), "boundary+interior must cover the chunk"
+            # halo = exactly the remote elements face-adjacent to the chunk
+            if npart.halo is not None:
+                nn = neighbors[npart.elements].ravel()
+                nn = nn[nn >= 0]
+                expected = np.unique(nn[self.node_of[nn] != npart.node])
+                assert np.array_equal(np.sort(npart.halo), expected), "halo mismatch"
+                assert len(np.intersect1d(npart.halo, npart.elements)) == 0
         assert (counts == 1).all(), "every element assigned to exactly one node"
 
 
@@ -227,13 +254,17 @@ def build_nested_partition(
     accel_fraction: float = 0.0,
     node_weights: Optional[Sequence[float]] = None,
     accel_counts: Optional[Sequence[int]] = None,
+    neighbors: Optional[np.ndarray] = None,
 ) -> NestedPartition:
     """Build the paper's two-level partition for a structured hex grid.
 
     ``accel_fraction`` — target fraction of each node's elements to offload
     (e.g. K_MIC/K = 1.6/2.6 for the paper's Stampede optimum).  Clamped per
     node to the available interior.  ``accel_counts`` overrides it per node
-    (that is what the load balancer produces).
+    (that is what the load balancer produces).  ``neighbors`` — (K, 6)
+    face-neighbour table; pass the solver mesh's table when its topology
+    differs from the default non-periodic grid (e.g. periodic bricks), so
+    boundary/halo sets match what the step schedule actually exchanges.
     """
     nx, ny, nz = grid_dims
     K = nx * ny * nz
@@ -245,7 +276,12 @@ def build_nested_partition(
     for p in range(n_nodes):
         node_of[order[offsets[p] : offsets[p + 1]]] = p
 
-    neighbors = face_neighbors(grid_dims)
+    if neighbors is None:
+        neighbors = face_neighbors(grid_dims)
+    else:
+        neighbors = np.asarray(neighbors, dtype=np.int64)
+        if neighbors.shape != (K, 6):
+            raise ValueError(f"neighbors shape {neighbors.shape} != {(K, 6)}")
     # boundary = any face neighbour on another node (physical boundary does
     # NOT make an element 'boundary' — paper partitions on shared faces).
     nbr_node = np.where(neighbors >= 0, node_of[np.clip(neighbors, 0, None)], -2)
@@ -265,6 +301,11 @@ def build_nested_partition(
         n_accel = max(0, min(n_accel, len(interior)))
         accel, host_interior = _choose_accel_block(interior, n_accel, neighbors)
         accel_mask[accel] = True
+        # halo: the remote elements the exchange phase must fetch (sorted,
+        # so consumers get a deterministic extended-block layout)
+        nn = neighbors[chunk].ravel()
+        nn = nn[nn >= 0]
+        halo = np.unique(nn[node_of[nn] != p])
         nodes.append(
             NodePartition(
                 node=p,
@@ -272,6 +313,7 @@ def build_nested_partition(
                 boundary=boundary,
                 host_interior=host_interior,
                 accel=accel,
+                halo=halo,
             )
         )
 
@@ -284,5 +326,6 @@ def build_nested_partition(
         boundary_mask=boundary_mask,
         accel_mask=accel_mask,
         nodes=tuple(nodes),
+        neighbors=neighbors,
     )
     return part

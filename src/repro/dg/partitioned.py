@@ -5,12 +5,13 @@ device along the ``data`` mesh axis (Morton-ordered within the slab); the
 once-per-stage face exchange between slabs is a ring ``ppermute``
 (`halo_exchange_1d`).
 
-Level 2 — intra-node boundary/interior: the rhs is *structured* so that the
-slab-edge (boundary) face data is extracted and launched into the ring
-FIRST, then the volume kernel + intra-slab fluxes (interior work, no
-dependence on the halo) are computed, and finally the halo corrections are
-added.  XLA's scheduler overlaps the ppermute DMA with the interior
-compute — the paper's Fig 5.1 expressed as dataflow.
+Level 2 — intra-node boundary/interior: the rhs is a
+``repro.runtime.schedule.StepSchedule`` instantiation — slab-edge faces are
+packed and launched into the ring (boundary + exchange phases), the volume
+kernel + intra-slab fluxes run with no halo dependence (interior phase),
+and the received halo folds in last (correction phase).  XLA's scheduler
+overlaps the ppermute DMA with the interior compute — the paper's Fig 5.1
+expressed as dataflow.
 
 Correctness invariant (tested): the partitioned rhs/run equals the flat
 single-array solver bitwise up to float reassociation — the partition is a
@@ -53,6 +54,30 @@ from repro.dg.operators import (
 )
 from repro.dg.rk import lsrk45_step
 from repro.dg.solver import DGSolver
+from repro.runtime.schedule import StepSchedule
+
+_MATS = ("rho", "cp", "cs", "mu")
+
+
+def pack_face_payload(S_slab, v_slab, mats: dict):
+    """One slab edge -> (ring payload, own face traces).
+
+    ``S_slab``/``v_slab`` are the stress/velocity fields of the edge layer
+    with the face already extracted; the payload rows carry the face data
+    plus the material line the neighbour needs for the Riemann solve.
+    """
+    L = S_slab.shape[0]
+    mat = jnp.stack([mats[k] for k in _MATS])
+    return jnp.concatenate([S_slab.reshape(L, -1), v_slab.reshape(L, -1), mat.T], axis=1)
+
+
+def unpack_face_payload(buf, L: int, M: int):
+    """Inverse of :func:`pack_face_payload`: (S_face, v_face, materials)."""
+    nface = 6 * M * M
+    Sf = buf[:, :nface].reshape(L, 6, M, M)
+    vf = buf[:, nface : nface + 3 * M * M].reshape(L, 3, M, M)
+    mat = buf[:, nface + 3 * M * M :]
+    return Sf, vf, {k: mat[:, i] for i, k in enumerate(_MATS)}
 
 
 def slab_neighbors(grid, n_slabs: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -110,6 +135,8 @@ class PartitionedDG:
         self.mu = jnp.asarray(s.mu[p])
         self.cp = jnp.sqrt((self.lam + 2 * self.mu) / self.rho)
         self.cs = jnp.sqrt(self.mu / self.rho)
+        self.inv_perm = np.empty_like(self.order_perm)
+        self.inv_perm[self.order_perm] = np.arange(len(self.order_perm))
         self.spec_q = P(self.axis, None, None, None, None)
         self.spec_e = P(self.axis)
 
@@ -118,71 +145,70 @@ class PartitionedDG:
         return q_flat[self.order_perm]
 
     def permute_out(self, q_part: jnp.ndarray) -> jnp.ndarray:
-        inv = np.empty_like(self.order_perm)
-        inv[self.order_perm] = np.arange(len(self.order_perm))
-        return q_part[inv]
+        return q_part[self.inv_perm]
 
     # ------------------------------------------------------------------
-    def _rhs_local(self, q, nbr, rho, lam, mu, cp, cs):
-        """Per-device rhs with ring halo exchange; runs inside shard_map."""
+    def _apply_halo(self, out, buf, own_faces, st, side: str, idx):
+        """Fold one received slab-edge halo (``lo`` or ``hi``) into ``out``."""
         s = self.solver
         L = self.layer
-        S = stress(q, lam, mu)
+        sl = slice(None, L) if side == "lo" else slice(-L, None)
+        Sm, vm = own_faces
+        Sp, vp, mp = unpack_face_payload(buf, L, s.M)
+        mm = {k: st[k][sl] for k in _MATS}
+        # the global x boundary (first/last device) is already mirrored by
+        # the intra pass (nbr == -1): zero the halo correction there
+        is_global = (idx == 0) if side == "lo" else (idx == self.P - 1)
+        mp = {k: jnp.where(is_global, mm[k], v) for k, v in mp.items()}
+        sign = -1.0 if side == "lo" else +1.0
+        FE, Fv = riemann_correction(Sm, vm, Sp, vp, 0, sign, mm, mp)
+        corr = jnp.concatenate([FE, Fv / st["rho"][sl, None, None, None]], axis=1)
+        corr = jnp.where(is_global, 0.0, corr)
+        node = 0 if side == "lo" else s.M - 1
+        return out.at[sl, :, node, :, :].add(-s.lift[0] * corr)
 
-        # ---- boundary work first: extract slab-edge faces, launch the ring
-        lo_S = extract_face(S[:L], 0)  # -x faces of first layer
-        lo_v = extract_face(q[:L, 6:9], 0)
-        hi_S = extract_face(S[-L:], 1)  # +x faces of last layer
-        hi_v = extract_face(q[-L:, 6:9], 1)
-        lo_mat = jnp.stack([rho[:L], cp[:L], cs[:L], mu[:L]])
-        hi_mat = jnp.stack([rho[-L:], cp[-L:], cs[-L:], mu[-L:]])
-        send_lo = jnp.concatenate([lo_S.reshape(L, -1), lo_v.reshape(L, -1),
-                                   lo_mat.T], axis=1)
-        send_hi = jnp.concatenate([hi_S.reshape(L, -1), hi_v.reshape(L, -1),
-                                   hi_mat.T], axis=1)
-        from_prev, from_next = halo_exchange_1d(send_lo, send_hi, self.axis)
+    def _make_schedule(self, nbr) -> StepSchedule:
+        """The slab rhs as the shared four-phase schedule: pack slab-edge
+        faces -> ring exchange -> volume + intra-slab fluxes -> halo fold."""
+        s = self.solver
+        L = self.layer
 
-        # ---- interior work: volume + intra-slab fluxes (independent of halo)
-        out = volume_rhs(q, s.D, s.metrics, rho, lam, mu)
-        out = out + surface_rhs(q, nbr, s.lift, rho, lam, mu, cp, cs)
+        def boundary(st):
+            # extract both slab-edge faces and pack the ring payloads
+            S = stress(st["q"], st["lam"], st["mu"])
+            lo_S = extract_face(S[:L], 0)  # -x faces of first layer
+            lo_v = extract_face(st["q"][:L, 6:9], 0)
+            hi_S = extract_face(S[-L:], 1)  # +x faces of last layer
+            hi_v = extract_face(st["q"][-L:, 6:9], 1)
+            lo = pack_face_payload(lo_S, lo_v, {k: st[k][:L] for k in _MATS})
+            hi = pack_face_payload(hi_S, hi_v, {k: st[k][-L:] for k in _MATS})
+            return {"send_lo": lo, "send_hi": hi,
+                    "lo_faces": (lo_S, lo_v), "hi_faces": (hi_S, hi_v)}
 
-        # ---- boundary corrections from the halo
-        idx = jax.lax.axis_index(self.axis)
-        M = s.M
-        nface = 6 * M * M
+        def exchange(send, st):
+            from_prev, from_next = halo_exchange_1d(
+                send["send_lo"], send["send_hi"], self.axis
+            )
+            return dict(send, from_prev=from_prev, from_next=from_next)
 
-        def unpack(buf):
-            Sf = buf[:, : nface].reshape(L, 6, M, M)
-            vf = buf[:, nface : nface + 3 * M * M].reshape(L, 3, M, M)
-            mat = buf[:, nface + 3 * M * M :]
-            return Sf, vf, {"rho": mat[:, 0], "cp": mat[:, 1], "cs": mat[:, 2], "mu": mat[:, 3]}
+        def interior(st):
+            # volume + intra-slab fluxes: no dependence on the ring payload
+            out = volume_rhs(st["q"], s.D, s.metrics, st["rho"], st["lam"], st["mu"])
+            return out + surface_rhs(st["q"], nbr, s.lift, st["rho"], st["lam"],
+                                     st["mu"], st["cp"], st["cs"])
 
-        # -x faces of the first layer (neighbor = prev device's last layer)
-        Sp, vp, mp = unpack(from_prev)
-        Sm_lo = lo_S
-        vm_lo = lo_v
-        mm_lo = {"rho": rho[:L], "cp": cp[:L], "cs": cs[:L], "mu": mu[:L]}
-        # the global -x boundary (device 0) is already mirrored by the intra
-        # pass (nbr == -1): zero the halo correction there
-        is_global_lo = idx == 0
-        mp = {k: jnp.where(is_global_lo, mm_lo[k], v) for k, v in mp.items()}
-        FE, Fv = riemann_correction(Sm_lo, vm_lo, Sp, vp, 0, -1.0, mm_lo, mp)
-        corr = jnp.concatenate([FE, Fv / rho[:L, None, None, None]], axis=1)
-        corr = jnp.where(is_global_lo, 0.0, corr)
-        out = out.at[:L, :, 0, :, :].add(-s.lift[0] * corr)
+        def correction(out, recv, st):
+            idx = jax.lax.axis_index(self.axis)
+            out = self._apply_halo(out, recv["from_prev"], recv["lo_faces"], st, "lo", idx)
+            return self._apply_halo(out, recv["from_next"], recv["hi_faces"], st, "hi", idx)
 
-        # +x faces of the last layer (neighbor = next device's first layer)
-        Sp, vp, mp = unpack(from_next)
-        Sm_hi = hi_S
-        vm_hi = hi_v
-        mm_hi = {"rho": rho[-L:], "cp": cp[-L:], "cs": cs[-L:], "mu": mu[-L:]}
-        is_global_hi = idx == self.P - 1
-        mp = {k: jnp.where(is_global_hi, mm_hi[k], v) for k, v in mp.items()}
-        FE, Fv = riemann_correction(Sm_hi, vm_hi, Sp, vp, 0, +1.0, mm_hi, mp)
-        corr = jnp.concatenate([FE, Fv / rho[-L:, None, None, None]], axis=1)
-        corr = jnp.where(is_global_hi, 0.0, corr)
-        out = out.at[-L:, :, s.M - 1, :, :].add(-s.lift[0] * corr)
-        return out
+        return StepSchedule(boundary=boundary, exchange=exchange,
+                            interior=interior, correction=correction, name="slab-spmd")
+
+    def _rhs_local(self, q, nbr, rho, lam, mu, cp, cs):
+        """Per-device rhs with ring halo exchange; runs inside shard_map."""
+        state = {"q": q, "rho": rho, "lam": lam, "mu": mu, "cp": cp, "cs": cs}
+        return self._make_schedule(nbr).rhs(state)
 
     # ------------------------------------------------------------------
     def rhs(self, q_part: jnp.ndarray) -> jnp.ndarray:

@@ -3,8 +3,10 @@ sampling, report per-token latency/throughput.
 
 The request batch is spliced across ``--partitions`` virtual partitions by
 an online ``repro.runtime.executor.NestedPartitionExecutor`` instead of the
-old ad-hoc static split: a calibration pass times each partition's
-prefill+decode, the executor re-solves the row split (paper section 5.6 run
+old ad-hoc static split: a calibration pass times each partition's phases
+into a ``CalibrationReport`` (prefill as the boundary phase — per-request
+setup cost — and decode as the interior phase), the executor re-solves the
+row split from that report (``plan_from_report``, paper section 5.6 run
 online), and the serving pass uses the calibrated counts.  With
 ``--partitions 1`` (default) the flow is the classic single-batch path, but
 still driven through the executor's step API.
@@ -27,7 +29,7 @@ from repro.data.pipeline import _rng
 from repro.launch.mesh import debug_mesh, make_production_mesh
 from repro.models.zoo import LM, get_config
 from repro.parallel.steps import make_serve_step, make_shardings
-from repro.runtime import NestedPartitionExecutor
+from repro.runtime import CalibrationReport, NestedPartitionExecutor
 
 
 def main():
@@ -97,9 +99,12 @@ def main():
                 warmed.add(len(rows))
 
     if P > 1:
-        # calibration pass: time each partition on the current (equal) split,
-        # feed the equalizer, re-solve the row counts
-        times = np.zeros(P)
+        # calibration pass: time each partition's phases on the current
+        # (equal) split — prefill is the boundary phase (per-request setup),
+        # decode the interior phase — then re-solve the row counts from the
+        # phase-resolved report
+        t_prefill = np.zeros(P)
+        t_decode = np.zeros(P)
         offs = executor.offsets
         warm(offs)
         for p in range(P):
@@ -107,10 +112,13 @@ def main():
             if len(rows) == 0:
                 continue
             _, tp, td = decode_rows(rows, max(2, args.calib_gen))
-            times[p] = tp + td
-        executor.observe(times)
-        executor.rebalance()
-        print(f"calibration times: {[round(float(t) * 1e3, 2) for t in times]} ms")
+            t_prefill[p], t_decode[p] = tp, td
+        report = CalibrationReport(boundary_s=t_prefill, interior_s=t_decode,
+                                   transfer_s=np.zeros(P))
+        executor.observe(report.step_s)
+        executor.plan_from_report(report)
+        print("calibration report:")
+        print(report.summary())
         print(f"calibrated split: counts={executor.counts.tolist()} "
               f"(round {executor.round}, predicted makespan "
               f"{executor.predicted_makespan() * 1e3:.1f}ms)")

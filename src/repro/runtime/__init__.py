@@ -7,10 +7,12 @@ from repro.runtime.executor import (
     bucket_counts,
 )
 from repro.runtime.fault_tolerance import FailureInjector, StepTimer, TrainSupervisor
+from repro.runtime.schedule import StepSchedule
 
 __all__ = [
     "BlockedDGEngine",
     "CalibrationReport",
+    "StepSchedule",
     "NestedPartitionExecutor",
     "Plan",
     "PlanCache",

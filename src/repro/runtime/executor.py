@@ -6,15 +6,20 @@ The paper's payoff is not a static split but a calibrated one: it solves
     T_acc(K_acc) = T_host(K - K_acc) + Transfer(K_acc)
 
 from *measured* kernel times so that neither side idles.  This module wires
-the repo's existing pieces (``core.load_balance``, ``core.partition``) into
-the measure -> re-solve -> re-splice loop that makes a heterogeneous run
-track hardware reality:
+the repo's existing pieces (``core.load_balance``, ``core.partition``,
+``runtime.schedule``) into the measure -> re-solve -> re-splice loop that
+makes a heterogeneous run track hardware reality:
 
-1. **calibrate** — a short phase that times boundary / interior / transfer
-   work per partition (``BlockedDGEngine.calibrate`` for the DG workload, or
-   injected ``time_models`` for simulated fleets);
+1. **calibrate** — a short phase that times the four ``StepSchedule``
+   phases (boundary face flux / interior volume / halo transfer / halo
+   fold) per partition.  ``BlockedDGEngine.calibrate`` resolves all four on
+   the DG workload; injected ``time_models`` give whole-step totals for
+   simulated fleets (``CalibrationReport.from_totals``);
 2. **solve** — measured step times feed ``rebalance_from_measurements`` /
-   ``solve_multiway`` to re-solve the asymmetric split;
+   ``solve_multiway``; a component-resolved report additionally enables the
+   overlap-aware solve ``plan_from_report``, whose time model
+   ``t_p(k) = boundary + max(interior, transfer) + correction`` credits a
+   partition for transfer hidden under interior compute (paper Fig 5.1);
 3. **resplice** — the ``NestedPartition`` index arrays are rebuilt and the
    device assignment re-spliced *without recompiling the interior kernels*:
    per-partition chunk sizes are padded to ``bucket`` multiples, so the jit
@@ -23,9 +28,14 @@ track hardware reality:
    ``maybe_rebalance``) adopted by ``repro.dg.partitioned``,
    ``repro.launch.train`` and ``repro.launch.serve``.
 
-Solved splits are cached (hash of mesh/topology/weights -> counts) and
-persisted through ``repro.checkpoint``, so a restarted job starts from the
-last calibrated split instead of the naive one.  A straggler-injection hook
+``BlockedDGEngine`` executes each partition's block as a thin instantiation
+of the shared ``StepSchedule`` (the same object ``dg.partitioned`` builds
+its SPMD rhs from): the exchange phase gathers the halo, the interior phase
+runs the volume kernel on the block's own elements, and the correction
+phase computes the face flux and folds it in.  Solved splits are cached
+(hash of mesh/topology/weights -> counts) and persisted through
+``repro.checkpoint``, so a restarted job starts from the last calibrated
+split instead of the naive one.  A straggler-injection hook
 (``inject_straggler``) multiplies observed times for one partition, which is
 how tests exercise convergence: a 2x straggler must be rebalanced to within
 10% of the common-finish-time optimum in a few rounds.
@@ -47,11 +57,13 @@ from repro.core.load_balance import (
     solve_multiway,
 )
 from repro.core.partition import NestedPartition, build_nested_partition, splice
+from repro.runtime.schedule import CalibrationReport, StepSchedule
 
 __all__ = [
     "Plan",
     "PlanCache",
     "CalibrationReport",
+    "StepSchedule",
     "NestedPartitionExecutor",
     "BlockedDGEngine",
     "bucket_counts",
@@ -223,35 +235,6 @@ class PlanCache:
 
 
 # ---------------------------------------------------------------------------
-# Calibration
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class CalibrationReport:
-    """Per-partition seconds for the three classes of work the paper's
-    balance equation distinguishes (section 5.6)."""
-
-    boundary_s: np.ndarray  # face-flux work (the host keeps the network)
-    interior_s: np.ndarray  # volume work (what the accelerator absorbs)
-    transfer_s: np.ndarray  # slow-link gather of the halo / shared faces
-
-    @property
-    def step_s(self) -> np.ndarray:
-        return self.boundary_s + self.interior_s + self.transfer_s
-
-    def summary(self) -> str:
-        rows = []
-        for p in range(len(self.boundary_s)):
-            rows.append(
-                f"p{p}: boundary={self.boundary_s[p] * 1e3:.2f}ms "
-                f"interior={self.interior_s[p] * 1e3:.2f}ms "
-                f"transfer={self.transfer_s[p] * 1e3:.2f}ms"
-            )
-        return "\n".join(rows)
-
-
-# ---------------------------------------------------------------------------
 # The executor
 # ---------------------------------------------------------------------------
 
@@ -289,6 +272,7 @@ class NestedPartitionExecutor:
         plan_cache_dir: Optional[str] = None,
         initial_weights: Optional[Sequence[float]] = None,
         accel_fraction: float = 0.0,
+        neighbors: Optional[np.ndarray] = None,
     ):
         if grid_dims is not None:
             expected = int(np.prod(grid_dims))
@@ -306,10 +290,15 @@ class NestedPartitionExecutor:
             raise ValueError("need one time model per partition")
         self.plan_cache = PlanCache(plan_cache_dir) if plan_cache_dir else None
         self.accel_fraction = float(accel_fraction)
+        # face-neighbour table the nested partition is built from; engines
+        # whose mesh topology differs from the default non-periodic grid
+        # (periodic bricks) install their own via set_neighbors()
+        self.neighbors = None if neighbors is None else np.asarray(neighbors, dtype=np.int64)
 
         self._factors = np.ones(self.n_partitions)
         self._ewma: Optional[np.ndarray] = None
         self._obs_counts: Optional[np.ndarray] = None
+        self._n_obs = 0
         self._step = 0
         self.round = 0
         self.partition: Optional[NestedPartition] = None
@@ -391,27 +380,33 @@ class NestedPartitionExecutor:
 
     def calibrate(
         self,
-        measure_fn: Optional[Callable[[], np.ndarray]] = None,
+        measure_fn: Optional[Callable[[], "np.ndarray | CalibrationReport"]] = None,
         n_steps: int = 3,
     ) -> CalibrationReport:
         """Short calibration phase: run ``n_steps`` measurements and seed the
-        EWMA.  ``measure_fn`` returns per-partition step seconds (e.g.
-        ``BlockedDGEngine.measure_block_times``); without it the time models
-        are used."""
+        EWMA.  ``measure_fn`` returns either a ``CalibrationReport`` (phase-
+        resolved — e.g. a bound ``BlockedDGEngine.calibrate``) or plain
+        per-partition step seconds (``BlockedDGEngine.measure_block_times``,
+        the whole-step ``time_models`` default), which are carried as an
+        unresolved ``CalibrationReport.from_totals``."""
         reports = []
         for _ in range(max(1, n_steps)):
-            t = np.asarray(measure_fn() if measure_fn is not None else self.simulated_times())
-            self.observe(t)
-            reports.append(t)
-        med = np.median(np.stack(reports), axis=0)
-        # without a component-resolved engine the whole step is 'interior'
-        zeros = np.zeros_like(med)
-        return CalibrationReport(boundary_s=zeros, interior_s=med, transfer_s=zeros)
+            before = self._n_obs
+            r = measure_fn() if measure_fn is not None else self.simulated_times()
+            if not isinstance(r, CalibrationReport):
+                r = CalibrationReport.from_totals(np.asarray(r))
+            if self._n_obs == before:
+                # only observe if the measure_fn didn't already feed us
+                # (a bound BlockedDGEngine.calibrate observes internally)
+                self.observe(r.step_s)
+            reports.append(r)
+        return CalibrationReport.median(reports)
 
     def observe(self, times: Sequence[float]) -> None:
         """Record measured per-partition step seconds (straggler factors are
         applied here — the single injection point)."""
         t = np.asarray(times, dtype=np.float64) * self._factors
+        self._n_obs += 1
         if self._ewma is None or self.ewma_alpha >= 1.0:
             self._ewma = t.copy()
         else:
@@ -449,6 +444,12 @@ class NestedPartitionExecutor:
             self.plan_cache.put(plan)
         return plan
 
+    def set_neighbors(self, neighbors: np.ndarray) -> None:
+        """Install the true mesh topology (e.g. a periodic brick's wrapping
+        neighbour table) and re-splice so boundary/halo sets match it."""
+        self.neighbors = np.asarray(neighbors, dtype=np.int64)
+        self._resplice()
+
     def _resplice(self) -> None:
         """Rebuild index arrays for the current counts.  Interior kernels are
         NOT recompiled: consumers key their jit caches on ``chunk_pads``."""
@@ -458,6 +459,7 @@ class NestedPartitionExecutor:
                 self.n_partitions,
                 accel_fraction=self.accel_fraction,
                 node_weights=np.maximum(self.counts, 0) if self.counts.sum() else None,
+                neighbors=self.neighbors,
             )
             self.offsets = self.partition.offsets
         else:
@@ -487,6 +489,32 @@ class NestedPartitionExecutor:
         self.round += 1
         plan = dataclasses.replace(self.solve(w), round=self.round)
         self.apply(plan)
+        return plan
+
+    def plan_from_report(
+        self,
+        report: CalibrationReport,
+        overlap: bool = True,
+        apply: bool = True,
+    ) -> Plan:
+        """Overlap-aware solve from a phase-resolved calibration.
+
+        Feeds ``t_p(k) = boundary + max(interior, transfer) + correction``
+        (``report.time_models``) into ``solve_multiway``, so the planner
+        credits a partition for transfer time hidden under its interior
+        compute — the paper's Fig 5.1 schedule entering the balance
+        equation.  With ``overlap=False`` the phases are charged
+        back-to-back (the sequential strawman)."""
+        fns = report.time_models(self.counts, overlap=overlap)
+        res = solve_multiway(fns, self.n_items)
+        w = np.maximum(np.asarray(res.counts, dtype=np.float64), 1e-9)
+        plan = self.solve(w / w.sum())
+        if apply:
+            # the round counter tracks APPLIED resplices; a what-if solve
+            # (apply=False) must not inflate it
+            self.round += 1
+            plan = dataclasses.replace(plan, round=self.round)
+            self.apply(plan)
         return plan
 
     def maybe_rebalance(self, step: Optional[int] = None) -> Optional[Plan]:
@@ -552,15 +580,24 @@ class NestedPartitionExecutor:
 
 class BlockedDGEngine:
     """Executes a ``DGSolver`` rhs as per-partition element blocks with halo
-    gathers — the executor's heterogeneous execution engine.
+    gathers — the executor's heterogeneous execution engine, a thin
+    instantiation of the shared ``StepSchedule``.
 
-    Each partition's chunk (own elements + face halo) is padded to a
-    ``bucket`` multiple, so after a resplice the per-block jit cache is hit
-    whenever the padded size has been seen before; the full-field arrays
-    never change shape.  The rhs is mathematically the flat solver's rhs
-    restricted to each block (identical per-element arithmetic), so the
-    partitioned run matches the flat run bitwise — the partition is a
-    reordering, never an approximation.
+    Per block, the four phases are: *boundary* packs the halo request (the
+    index set that crosses the link), *exchange* gathers those remote
+    elements, *interior* runs the volume kernel on the block's own elements
+    (no halo dependence — the work that hides the transfer), and
+    *correction* computes the face flux on the assembled block and folds it
+    into the volume result.  ``calibrate`` times the phases separately
+    (face-flux time is attributed to ``boundary_s`` — it is boundary-face
+    work even though it executes inside the correction phase here).
+
+    Each block's index tables are padded to ``bucket`` multiples, so after
+    a resplice the per-block jit cache is hit whenever the padded sizes have
+    been seen before; the full-field arrays never change shape.  The rhs is
+    mathematically the flat solver's rhs restricted to each block (identical
+    per-element arithmetic), so the partitioned run matches the flat run
+    bitwise — the partition is a reordering, never an approximation.
     """
 
     def __init__(self, solver, executor: NestedPartitionExecutor):
@@ -578,6 +615,15 @@ class BlockedDGEngine:
         self._blocks: list = []
         self._jax = jax
         self._build_jitted()
+        self.schedule = self._make_schedule()
+        # the partition's boundary/halo sets must reflect the SOLVER mesh's
+        # topology (a periodic brick wraps; the default grid table does not)
+        mesh_nbr = np.asarray(solver.mesh.neighbors, dtype=np.int64)
+        current = executor.partition.neighbors if executor.partition is not None else executor.neighbors
+        if current is None or not np.array_equal(current, mesh_nbr):
+            executor.set_neighbors(mesh_nbr)
+        else:
+            executor.neighbors = mesh_nbr  # same table: no resplice needed
         self.rebuild()
         executor._resplice_hooks.append(self.rebuild)
 
@@ -585,37 +631,71 @@ class BlockedDGEngine:
 
     def _build_jitted(self):
         import jax
+        import jax.numpy as jnp
 
         from repro.dg.operators import surface_rhs, volume_rhs
 
         s = self.solver
         D, metrics, lift = s.D, s.metrics, s.lift
 
-        def gather(q, ext_idx):
-            return q[ext_idx]
+        def gather(q, idx):
+            return q[idx]
 
-        def interior(qb, rho, lam, mu):
-            return volume_rhs(qb, D, metrics, rho, lam, mu)
+        def assemble(q, own_idx, q_halo):
+            # own gather is node-local; concatenated with the exchanged halo
+            # this reproduces the extended block q[own ++ halo ++ pad]
+            return jnp.concatenate([q[own_idx], q_halo], axis=0)
+
+        def interior(q, own_idx, rho, lam, mu):
+            return volume_rhs(q[own_idx], D, metrics, rho, lam, mu)
 
         def boundary(qb, nbr_local, rho, lam, mu, cp, cs):
             return surface_rhs(qb, nbr_local, lift, rho, lam, mu, cp, cs)
 
-        def block_rhs(q, ext_idx, nbr_local, rho, lam, mu, cp, cs):
-            qb = q[ext_idx]
-            return volume_rhs(qb, D, metrics, rho, lam, mu) + surface_rhs(
-                qb, nbr_local, lift, rho, lam, mu, cp, cs
-            )
+        def fold(vol, sur):
+            # rows past the block's own count are dump rows (scattered to the
+            # sentinel); only the leading own rows must line up
+            return vol + sur[: vol.shape[0]]
 
         self._gather = jax.jit(gather)
+        self._assemble = jax.jit(assemble)
         self._interior = jax.jit(interior)
         self._boundary = jax.jit(boundary)
-        self._block_rhs = jax.jit(block_rhs)
+        self._fold = jax.jit(fold)
+
+    def _make_schedule(self) -> StepSchedule:
+        """The block rhs as the shared four-phase schedule; ``state`` is
+        ``(q, block)`` so one schedule (and one jit cache keyed on padded
+        shapes) serves every block."""
+
+        def boundary(state):
+            _, b = state
+            return b["halo"]  # the pack: which remote elements cross the link
+
+        def exchange(send, state):
+            q, _ = state
+            return self._gather(q, send)
+
+        def interior(state):
+            q, b = state
+            return self._interior(q, b["own_pad"], b["rho_o"], b["lam_o"], b["mu_o"])
+
+        def correction(part, recv, state):
+            q, b = state
+            qb = self._assemble(q, b["own"], recv)
+            sur = self._boundary(qb, b["nbr_local"], b["rho"], b["lam"],
+                                 b["mu"], b["cp"], b["cs"])
+            return self._fold(part, sur)
+
+        return StepSchedule(boundary=boundary, exchange=exchange,
+                            interior=interior, correction=correction, name="blocked-dg")
 
     # -- block tables -------------------------------------------------------
 
     def rebuild(self) -> None:
         """Re-splice: rebuild per-partition index tables from the executor's
-        current ``NestedPartition``.  No kernel recompiles unless a brand-new
+        current ``NestedPartition`` (which carries each node's boundary/
+        interior/halo index sets).  No kernel recompiles unless a brand-new
         padded size appears."""
         import jax.numpy as jnp
 
@@ -631,15 +711,14 @@ class BlockedDGEngine:
             if len(own) == 0:
                 blocks.append(None)
                 continue
-            in_own = np.zeros(K, dtype=bool)
-            in_own[own] = True
-            nn = nbr[own].ravel()
-            nn = nn[nn >= 0]
-            halo = np.unique(nn[~in_own[nn]])
+            halo = np.asarray(node.halo, dtype=np.int64)
             ext = np.concatenate([own, halo])
             pad = pad_to_bucket(len(ext), bucket)
-            self.pads_seen.add(pad)
+            pad_own = pad_to_bucket(len(own), bucket)
+            self.pads_seen.update((pad, pad_own))
             ext_pad = np.concatenate([ext, np.zeros(pad - len(ext), dtype=np.int64)])
+            own_pad = np.concatenate([own, np.zeros(pad_own - len(own), dtype=np.int64)])
+            halo_pad = ext_pad[len(own):]  # halo ++ zero-pad: concat target
             lut = np.full(K, -1, dtype=np.int64)
             lut[ext] = np.arange(len(ext))
             nbr_ext = nbr[ext_pad]
@@ -647,10 +726,12 @@ class BlockedDGEngine:
             # lut resolves it; -1 (physical boundary) is preserved.  halo and
             # pad rows may point outside ext -> -1; their output is dumped.
             nbr_local = np.where(nbr_ext >= 0, lut[np.clip(nbr_ext, 0, None)], -1)
-            scat = np.concatenate([own, np.full(pad - len(own), K, dtype=np.int64)])
+            scat = np.concatenate([own, np.full(pad_own - len(own), K, dtype=np.int64)])
             blocks.append(
                 {
-                    "ext": jnp.asarray(ext_pad),
+                    "own": jnp.asarray(own),
+                    "own_pad": jnp.asarray(own_pad),
+                    "halo": jnp.asarray(halo_pad),
                     "nbr_local": jnp.asarray(nbr_local),
                     "scat": jnp.asarray(scat),
                     "rho": jnp.asarray(s.rho[ext_pad], dt),
@@ -658,12 +739,19 @@ class BlockedDGEngine:
                     "mu": jnp.asarray(s.mu[ext_pad], dt),
                     "cp": jnp.asarray(np.sqrt((s.lam + 2 * s.mu) / s.rho)[ext_pad], dt),
                     "cs": jnp.asarray(np.sqrt(s.mu / s.rho)[ext_pad], dt),
+                    "rho_o": jnp.asarray(s.rho[own_pad], dt),
+                    "lam_o": jnp.asarray(s.lam[own_pad], dt),
+                    "mu_o": jnp.asarray(s.mu[own_pad], dt),
                     "n_own": len(own),
                 }
             )
         self._blocks = blocks
 
     # -- execution ----------------------------------------------------------
+
+    def block_rhs(self, q, b):
+        """One partition's rhs rows via the four-phase schedule."""
+        return self.schedule.rhs((q, b))
 
     def rhs(self, q):
         """Full rhs assembled from per-partition block evaluations."""
@@ -674,9 +762,7 @@ class BlockedDGEngine:
         for b in self._blocks:
             if b is None:
                 continue
-            rb = self._block_rhs(q, b["ext"], b["nbr_local"], b["rho"], b["lam"],
-                                 b["mu"], b["cp"], b["cs"])
-            out = out.at[b["scat"]].set(rb)
+            out = out.at[b["scat"]].set(self.block_rhs(q, b))
         return out[:K]
 
     def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False):
@@ -697,46 +783,62 @@ class BlockedDGEngine:
 
     # -- measurement --------------------------------------------------------
 
-    def _time(self, fn, *args, reps: int = 1) -> float:
+    def _time(self, fn, *args, reps: int = 1):
+        """(median seconds, last result) — returning the result lets
+        calibrate reuse each phase's output as the next phase's input
+        instead of re-running kernels it already timed."""
         jax = self._jax
-        jax.block_until_ready(fn(*args))  # warmup / compile
+        out = fn(*args)
+        jax.block_until_ready(out)  # warmup / compile
         ts = []
         for _ in range(reps):
             t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args))
+            out = fn(*args)
+            jax.block_until_ready(out)
             ts.append(time.perf_counter() - t0)
         ts.sort()
-        return ts[len(ts) // 2]
+        return ts[len(ts) // 2], out
 
     def measure_block_times(self, q, reps: int = 1) -> np.ndarray:
-        """Per-partition seconds for one rhs evaluation of each block."""
+        """Per-partition seconds for one rhs evaluation of each block
+        (the full four-phase schedule, end to end)."""
         out = np.zeros(len(self._blocks))
         for p, b in enumerate(self._blocks):
             if b is None:
                 continue
-            out[p] = self._time(
-                self._block_rhs, q, b["ext"], b["nbr_local"], b["rho"], b["lam"],
-                b["mu"], b["cp"], b["cs"], reps=reps,
-            )
+            out[p], _ = self._time(self.block_rhs, q, b, reps=reps)
         return out
 
     def calibrate(self, q, reps: int = 2) -> CalibrationReport:
-        """The executor's phase (1): time boundary (face flux), interior
-        (volume) and transfer (halo gather) work per partition."""
+        """The executor's phase (1): time the four schedule phases per
+        partition — boundary (face flux), interior (volume), transfer (halo
+        gather) and correction (halo fold) — so the planner can run the
+        overlap-aware solve (``NestedPartitionExecutor.plan_from_report``)."""
         P = len(self._blocks)
         boundary = np.zeros(P)
         interior = np.zeros(P)
         transfer = np.zeros(P)
+        correction = np.zeros(P)
         for p, b in enumerate(self._blocks):
             if b is None:
                 continue
-            transfer[p] = self._time(self._gather, q, b["ext"], reps=reps)
-            qb = self._gather(q, b["ext"])
-            interior[p] = self._time(self._interior, qb, b["rho"], b["lam"], b["mu"], reps=reps)
-            boundary[p] = self._time(
+            # each timed phase's output feeds the next phase, exactly like
+            # the composed schedule — no kernel runs twice
+            transfer[p], q_halo = self._time(self._gather, q, b["halo"], reps=reps)
+            interior[p], vol = self._time(
+                self._interior, q, b["own_pad"], b["rho_o"], b["lam_o"], b["mu_o"],
+                reps=reps,
+            )
+            t_asm, qb = self._time(self._assemble, q, b["own"], q_halo, reps=reps)
+            boundary[p], sur = self._time(
                 self._boundary, qb, b["nbr_local"], b["rho"], b["lam"], b["mu"],
                 b["cp"], b["cs"], reps=reps,
             )
-        report = CalibrationReport(boundary_s=boundary, interior_s=interior, transfer_s=transfer)
+            t_fold, _ = self._time(self._fold, vol, sur, reps=reps)
+            # correction = everything the correction phase does besides the
+            # face flux itself: assemble the block, fold the flux in
+            correction[p] = t_asm + t_fold
+        report = CalibrationReport(boundary_s=boundary, interior_s=interior,
+                                   transfer_s=transfer, correction_s=correction)
         self.executor.observe(report.step_s)
         return report

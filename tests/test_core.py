@@ -119,6 +119,78 @@ def test_hierarchical_splice_nests():
     assert total == 100
 
 
+def test_hierarchical_splice_degenerate_level():
+    """A single-part level is a pass-through: the chunks below it are the
+    same as if the level were absent."""
+    levels = hierarchical_splice(97, [[1], [2, 1, 1]])
+    # level 0 is the whole array in one chunk
+    np.testing.assert_array_equal(levels[0][0], [0, 97])
+    flat = hierarchical_splice(97, [[2, 1, 1]])
+    np.testing.assert_array_equal(levels[1][0], flat[0][0])
+    # degenerate level at the bottom: every chunk survives unsplit
+    levels2 = hierarchical_splice(97, [[2, 1, 1], [1]])
+    sizes_top = np.diff(levels2[0][0])
+    sizes_bot = [int(o[-1] - o[0]) for o in levels2[1]]
+    np.testing.assert_array_equal(sizes_top, sizes_bot)
+
+
+def test_choose_accel_block_empty_and_full():
+    """n_accel=0 offloads nothing; n_accel=len(interior) offloads all of it
+    (the two clamp ends of the paper's level-2 split)."""
+    from repro.core.partition import _choose_accel_block
+
+    grid = (4, 4, 4)
+    nbr = face_neighbors(grid)
+    interior = np.arange(64, dtype=np.int64)
+    accel, rest = _choose_accel_block(interior, 0, nbr)
+    assert len(accel) == 0
+    np.testing.assert_array_equal(rest, interior)
+    accel, rest = _choose_accel_block(interior, 64, nbr)
+    np.testing.assert_array_equal(accel, interior)
+    assert len(rest) == 0
+    # over-asking is clamped the same as asking for everything
+    accel, rest = _choose_accel_block(interior, 100, nbr)
+    np.testing.assert_array_equal(accel, interior)
+
+
+def test_build_partition_accel_extremes():
+    """build_nested_partition at accel_fraction 0 and 1: the offload is
+    empty / exactly the interior, and the invariants still hold."""
+    part0 = build_nested_partition((6, 4, 4), 3, accel_fraction=0.0)
+    part0.validate()
+    assert part0.accel_mask.sum() == 0
+    part1 = build_nested_partition((6, 4, 4), 3, accel_fraction=1.0)
+    part1.validate()
+    for node in part1.nodes:
+        # everything offloadable (= the whole interior) is offloaded
+        assert len(node.host_interior) == 0
+        np.testing.assert_array_equal(np.sort(node.accel), np.sort(node.interior))
+
+
+def test_partition_boundary_interior_disjoint_cover_and_halo():
+    """Each node's boundary/interior sets are a disjoint cover of its chunk,
+    and the halo is exactly the remote face-adjacent elements."""
+    grid = (6, 4, 4)
+    part = build_nested_partition(grid, 4, accel_fraction=0.4)
+    part.validate()  # includes the cover + halo invariants
+    nbr = face_neighbors(grid)
+    for node in part.nodes:
+        both = np.concatenate([node.boundary, node.interior])
+        assert len(np.unique(both)) == len(both)  # disjoint
+        np.testing.assert_array_equal(np.sort(both), np.sort(node.elements))
+        # every boundary element really owns a cross-node face
+        for e in node.boundary:
+            nbrs = nbr[e][nbr[e] >= 0]
+            assert (part.node_of[nbrs] != node.node).any()
+        # halo elements live on other nodes and touch this chunk
+        assert (part.node_of[node.halo] != node.node).all()
+        in_chunk = np.zeros(part.n_elements, dtype=bool)
+        in_chunk[node.elements] = True
+        for h in node.halo:
+            hn = nbr[h][nbr[h] >= 0]
+            assert in_chunk[hn].any()
+
+
 # ---------------------------------------------------------------------------
 # Load balancing (paper section 5.6)
 # ---------------------------------------------------------------------------
