@@ -29,6 +29,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("suites", nargs="*", default=[],
                     help=f"subset of suites (default: all of {', '.join(suites)})")
+    ap.add_argument("--suite", action="append", default=[],
+                    help="same as the positional form (repeatable): "
+                         "python -m benchmarks.run --suite table6_1 --smoke")
+    ap.add_argument("--skip", action="append", default=[],
+                    help="suites to exclude (repeatable) — lets CI run "
+                         "'everything except X' without a hand-maintained list")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, 1 rep — finishes in well under 2 minutes")
     ap.add_argument("--overlap", choices=["on", "off", "both"], default="both",
@@ -36,10 +42,11 @@ def main() -> None:
                          "overlap schedule on/off (delta row when 'both')")
     args = ap.parse_args()
 
-    unknown = [s for s in args.suites if s not in suites]
+    requested = list(args.suites) + list(args.suite)
+    unknown = [s for s in requested + args.skip if s not in suites]
     if unknown:
         ap.error(f"unknown suites {unknown}; choose from {list(suites)}")
-    picked = args.suites or list(suites)
+    picked = [s for s in (requested or list(suites)) if s not in args.skip]
     print("name,us_per_call,derived")
     for name in picked:
         kwargs = {"smoke": args.smoke}

@@ -9,30 +9,51 @@
 - overlap:      boundary/interior overlapped collective-matmul primitives
 """
 
-from repro.core.load_balance import SplitResult, rebalance_from_measurements, solve_multiway, solve_two_way
-from repro.core.morton import morton_order, morton_order_coords
+from repro.core.load_balance import (
+    HierarchicalSplit,
+    NodeModel,
+    SplitResult,
+    rebalance_from_measurements,
+    solve_hierarchical,
+    solve_multiway,
+    solve_two_way,
+)
+from repro.core.morton import curve_rank, is_curve_contiguous, morton_order, morton_order_coords
 from repro.core.partition import (
+    ClusterPartition,
     NestedPartition,
     NodePartition,
+    build_cluster_partition,
     build_nested_partition,
+    face_cut_matrix,
     face_neighbors,
     hierarchical_splice,
+    node_weights_from_devices,
     splice,
     surface_faces,
 )
 
 __all__ = [
     "SplitResult",
+    "NodeModel",
+    "HierarchicalSplit",
     "solve_two_way",
     "solve_multiway",
+    "solve_hierarchical",
     "rebalance_from_measurements",
     "morton_order",
     "morton_order_coords",
+    "curve_rank",
+    "is_curve_contiguous",
+    "ClusterPartition",
     "NestedPartition",
     "NodePartition",
+    "build_cluster_partition",
     "build_nested_partition",
+    "face_cut_matrix",
     "face_neighbors",
     "hierarchical_splice",
+    "node_weights_from_devices",
     "splice",
     "surface_faces",
 ]

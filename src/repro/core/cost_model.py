@@ -27,6 +27,7 @@ from typing import Callable, Dict, Optional
 from repro.core.topology import (
     DeviceClass,
     LinkClass,
+    STAMPEDE_IB,
     STAMPEDE_MIC,
     STAMPEDE_PCI,
     STAMPEDE_SNB_SOCKET,
@@ -241,6 +242,30 @@ def transfer_time_fn(
         if K_accel <= 0:
             return 0.0
         return mult * link.time(shared_face_bytes(K_accel, order, n_fields), n_messages)
+
+    return T
+
+
+def inter_node_transfer_fn(
+    order: int,
+    link: LinkClass = STAMPEDE_IB,
+    n_fields: int = 9,
+    dtype_bytes: int = 8,
+    surface_fraction: float = 1.0,
+    n_messages: int = 2,
+) -> Callable[[float], float]:
+    """Cluster-level halo time per step for a Morton-compact chunk of k
+    elements: the alpha-beta ``link`` on ``surface_fraction`` of the chunk's
+    ~6*k^(2/3)-face surface.  The single source for this closure — the
+    simulated cluster, the printed plan and the weak-scaling benchmark all
+    price the same exchange through here (with their own fraction/message
+    parameters), so they cannot drift apart."""
+
+    def T(k: float) -> float:
+        if k <= 0 or surface_fraction <= 0:
+            return 0.0
+        nbytes = shared_face_bytes(k, order, n_fields, dtype_bytes) * surface_fraction
+        return link.time(nbytes, n_messages)
 
     return T
 

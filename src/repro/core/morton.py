@@ -19,6 +19,8 @@ __all__ = [
     "morton_encode3",
     "morton_order",
     "morton_order_coords",
+    "curve_rank",
+    "is_curve_contiguous",
 ]
 
 
@@ -72,3 +74,26 @@ def morton_order(grid_dims: tuple) -> np.ndarray:
 def morton_order_coords(coords: np.ndarray) -> np.ndarray:
     """Argsort arbitrary integer (K,3) coordinates into Morton order."""
     return np.argsort(morton_encode3(coords), kind="stable")
+
+
+def curve_rank(order: np.ndarray) -> np.ndarray:
+    """Inverse permutation: position of each element id along the curve.
+
+    ``rank[e]`` is where element ``e`` sits in ``order``; a set of elements
+    is curve-contiguous iff its ranks form a gap-free integer range.  The
+    cluster partition's level-1 invariant — each node owns a contiguous
+    Morton range — is checked in terms of this.
+    """
+    order = np.asarray(order)
+    rank = np.empty(len(order), dtype=np.int64)
+    rank[order] = np.arange(len(order), dtype=np.int64)
+    return rank
+
+
+def is_curve_contiguous(order: np.ndarray, elements: np.ndarray) -> bool:
+    """True iff ``elements`` occupy one gap-free run of the curve ``order``."""
+    elements = np.asarray(elements)
+    if len(elements) == 0:
+        return True
+    ranks = np.sort(curve_rank(order)[elements])
+    return bool(ranks[-1] - ranks[0] == len(ranks) - 1 and len(np.unique(ranks)) == len(ranks))

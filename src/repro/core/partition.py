@@ -30,7 +30,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.morton import morton_order
+from repro.core.morton import curve_rank, morton_order
 
 __all__ = [
     "splice",
@@ -38,7 +38,11 @@ __all__ = [
     "face_neighbors",
     "NodePartition",
     "NestedPartition",
+    "ClusterPartition",
     "build_nested_partition",
+    "build_cluster_partition",
+    "node_weights_from_devices",
+    "face_cut_matrix",
     "surface_faces",
 ]
 
@@ -329,3 +333,194 @@ def build_nested_partition(
         neighbors=neighbors,
     )
     return part
+
+
+# ---------------------------------------------------------------------------
+# Level 0: the cluster — Morton inter-node splice over weighted virtual nodes
+# ---------------------------------------------------------------------------
+
+
+def node_weights_from_devices(devices: Sequence) -> np.ndarray:
+    """Normalized inter-node splice weights from per-node ``DeviceClass``
+    throughput (sustained FLOP/s) — the paper's heterogeneous-fleet level-1
+    weighting: a node twice as fast owns twice the curve."""
+    w = np.array([float(d.sustained_flops) for d in devices], dtype=np.float64)
+    if (w <= 0).any():
+        raise ValueError(f"device throughputs must be positive, got {w}")
+    return w / w.sum()
+
+
+def face_cut_matrix(node_of: np.ndarray, neighbors: np.ndarray, n_nodes: int) -> np.ndarray:
+    """Directed cross-node face counts: ``M[i, j]`` = faces whose owning
+    element lives on node ``i`` and whose neighbour lives on node ``j``.
+
+    This is the cluster-level exchange volume: node ``i`` fetches
+    ``M[i, j]`` faces' worth of halo data from node ``j`` each step, so the
+    alpha-beta inter-node link model prices ``sum_j M[i, j]`` bytes and
+    ``#{j : M[i, j] > 0}`` messages."""
+    valid = neighbors >= 0
+    own = np.broadcast_to(node_of[:, None], neighbors.shape)[valid]
+    other = node_of[neighbors[valid]]
+    cross = own != other
+    M = np.zeros((n_nodes, n_nodes), dtype=np.int64)
+    np.add.at(M, (own[cross], other[cross]), 1)
+    return M
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPartition:
+    """The paper's full nested scheme: level-0 Morton splice across cluster
+    nodes, level-1 boundary/interior (+ accelerator block) inside each node.
+
+    ``node_weights`` are the normalized level-0 splice weights (per-node
+    throughput); ``nested`` carries the per-node splits built on top of the
+    same splice.  The cluster partition adds the *inter-node* view: curve
+    contiguity per node and the cross-node face-cut matrix the halo exchange
+    is priced from.
+    """
+
+    node_weights: np.ndarray  # (N,) normalized level-0 splice weights
+    nested: NestedPartition
+
+    # -- delegation to the shared splice ------------------------------------
+
+    @property
+    def grid_dims(self) -> tuple:
+        return self.nested.grid_dims
+
+    @property
+    def n_nodes(self) -> int:
+        return self.nested.n_nodes
+
+    @property
+    def n_elements(self) -> int:
+        return self.nested.n_elements
+
+    @property
+    def order(self) -> np.ndarray:
+        return self.nested.order
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return self.nested.offsets
+
+    @property
+    def node_of(self) -> np.ndarray:
+        return self.nested.node_of
+
+    @property
+    def nodes(self) -> tuple:
+        return self.nested.nodes
+
+    # -- the inter-node view -------------------------------------------------
+
+    def face_cuts(self) -> np.ndarray:
+        """Directed cross-node face counts (see ``face_cut_matrix``)."""
+        neighbors = (
+            self.nested.neighbors
+            if self.nested.neighbors is not None
+            else face_neighbors(self.grid_dims)
+        )
+        return face_cut_matrix(self.node_of, neighbors, self.n_nodes)
+
+    def halo_bytes(self, order: int, n_fields: int = 9, dtype_bytes: int = 8) -> np.ndarray:
+        """Per-node bytes crossing the inter-node link each step: fetched
+        halo faces plus the mirrored send, each face carrying an
+        ``(order+1)^2``-node payload per field."""
+        cuts = self.face_cuts()
+        per_face = (order + 1) ** 2 * n_fields * dtype_bytes
+        return (cuts.sum(axis=1) + cuts.sum(axis=0)) * per_face
+
+    def halo_peers(self) -> np.ndarray:
+        """Number of distinct exchange partners per node (message count for
+        the alpha term of the link model)."""
+        cuts = self.face_cuts()
+        return ((cuts + cuts.T) > 0).sum(axis=1)
+
+    def validate(self) -> None:
+        """Cluster-level invariants on top of the nested ones:
+
+        * node element sets are a disjoint cover of the mesh (delegated);
+        * each node's set is contiguous in Morton curve order (level-0 is a
+          *splice* of the curve, the locality guarantee);
+        * the level-0 splice sizes follow ``node_weights`` exactly
+          (largest-remainder splice of the weights);
+        * every node's boundary/interior/halo split remains a validated
+          disjoint cover (delegated to ``NestedPartition.validate``).
+        """
+        self.nested.validate()
+        w = np.asarray(self.node_weights, dtype=np.float64)
+        assert len(w) == self.n_nodes, "one weight per node"
+        assert np.isclose(w.sum(), 1.0), "weights must be normalized"
+        expected = splice(self.n_elements, w)
+        assert np.array_equal(expected, self.offsets), "splice must follow node_weights"
+        rank = curve_rank(self.order)
+        for npart in self.nodes:
+            if len(npart.elements):
+                # ranks spanning exactly [lo, hi) over hi-lo distinct elements
+                # IS curve contiguity — one gap-free run of the splice
+                ranks = rank[npart.elements]
+                lo, hi = int(self.offsets[npart.node]), int(self.offsets[npart.node + 1])
+                assert len(ranks) == hi - lo, "chunk size must match its splice"
+                assert ranks.min() == lo and ranks.max() == hi - 1, (
+                    f"node {npart.node} not contiguous on the curve"
+                )
+
+    def summary(self) -> str:
+        rows = []
+        cuts = self.face_cuts()
+        for p, npart in enumerate(self.nodes):
+            rows.append(
+                f"node{p}: w={float(self.node_weights[p]):.3f} "
+                f"elements={npart.n_elements} boundary={len(npart.boundary)} "
+                f"interior={len(npart.interior)} accel={len(npart.accel)} "
+                f"halo={0 if npart.halo is None else len(npart.halo)} "
+                f"cut_faces={int(cuts[p].sum())}"
+            )
+        return "\n".join(rows)
+
+
+def build_cluster_partition(
+    grid_dims: tuple,
+    n_nodes: Optional[int] = None,
+    node_devices: Optional[Sequence] = None,
+    node_weights: Optional[Sequence[float]] = None,
+    accel_fraction: float = 0.0,
+    accel_counts: Optional[Sequence[int]] = None,
+    neighbors: Optional[np.ndarray] = None,
+) -> ClusterPartition:
+    """Build the cluster-level nested partition.
+
+    Level 0 Morton-orders the mesh and splices it across ``n_nodes`` virtual
+    nodes with sizes proportional to ``node_weights`` (or per-node
+    ``DeviceClass`` throughput via ``node_devices``; uniform when neither is
+    given).  Level 1 applies the existing boundary/interior split inside
+    each node's chunk — ``accel_fraction`` / ``accel_counts`` size the
+    per-node accelerator block exactly as in ``build_nested_partition``.
+    """
+    if node_devices is not None:
+        if node_weights is not None:
+            raise ValueError("pass node_devices or node_weights, not both")
+        node_weights = node_weights_from_devices(node_devices)
+        if n_nodes is not None and n_nodes != len(node_weights):
+            raise ValueError(f"n_nodes={n_nodes} != len(node_devices)={len(node_weights)}")
+        n_nodes = len(node_weights)
+    if node_weights is not None:
+        w = np.asarray(node_weights, dtype=np.float64)
+        if n_nodes is not None and n_nodes != len(w):
+            raise ValueError(f"n_nodes={n_nodes} != len(node_weights)={len(w)}")
+        n_nodes = len(w)
+        node_weights = w / w.sum()
+    if n_nodes is None:
+        raise ValueError("need n_nodes, node_weights or node_devices")
+    nested = build_nested_partition(
+        grid_dims,
+        n_nodes,
+        accel_fraction=accel_fraction,
+        node_weights=node_weights,
+        accel_counts=accel_counts,
+        neighbors=neighbors,
+    )
+    if node_weights is None:
+        node_weights = np.full(n_nodes, 1.0 / n_nodes)
+    return ClusterPartition(node_weights=np.asarray(node_weights), nested=nested)

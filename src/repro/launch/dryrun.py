@@ -150,7 +150,30 @@ def main():
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--fast", action="store_true", help="skip HLO text analysis")
     ap.add_argument("--out", default=None, help="directory for per-cell JSON records")
+    ap.add_argument("--cluster-plan", type=int, default=None, metavar="N",
+                    help="print the two-level nested-partition plan (Morton "
+                         "inter-node splice + per-node boundary/interior/accel "
+                         "split) for N simulated heterogeneous nodes, then exit")
+    ap.add_argument("--plan-grid", default="16,16,8",
+                    help="element grid for --cluster-plan (nx,ny,nz)")
+    ap.add_argument("--plan-order", type=int, default=7,
+                    help="DG polynomial order for --cluster-plan cost models")
+    ap.add_argument("--plan-speeds", default=None,
+                    help="comma-separated per-node relative speeds for "
+                         "--cluster-plan (default: homogeneous)")
     args = ap.parse_args()
+
+    if args.cluster_plan is not None:
+        from repro.runtime.cluster import format_cluster_plan
+
+        grid = tuple(int(x) for x in args.plan_grid.split(","))
+        speeds = (
+            [float(x) for x in args.plan_speeds.split(",")]
+            if args.plan_speeds else None
+        )
+        print(format_cluster_plan(grid, args.cluster_plan, order=args.plan_order,
+                                  speeds=speeds))
+        return 0
 
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
     if args.all:

@@ -6,6 +6,7 @@ from repro.runtime.executor import (
     PlanCache,
     bucket_counts,
 )
+from repro.runtime.cluster import NodeProfile, SimulatedCluster, format_cluster_plan, stampede_profile
 from repro.runtime.fault_tolerance import FailureInjector, StepTimer, TrainSupervisor
 from repro.runtime.schedule import StepSchedule
 
@@ -17,6 +18,10 @@ __all__ = [
     "Plan",
     "PlanCache",
     "bucket_counts",
+    "NodeProfile",
+    "SimulatedCluster",
+    "stampede_profile",
+    "format_cluster_plan",
     "FailureInjector",
     "StepTimer",
     "TrainSupervisor",

@@ -290,6 +290,9 @@ class NestedPartitionExecutor:
             raise ValueError("need one time model per partition")
         self.plan_cache = PlanCache(plan_cache_dir) if plan_cache_dir else None
         self.accel_fraction = float(accel_fraction)
+        # per-partition accelerator element counts (level-2 solve output);
+        # overrides accel_fraction when set — see set_accel_counts()
+        self.accel_counts: Optional[np.ndarray] = None
         # face-neighbour table the nested partition is built from; engines
         # whose mesh topology differs from the default non-periodic grid
         # (periodic bricks) install their own via set_neighbors()
@@ -450,6 +453,23 @@ class NestedPartitionExecutor:
         self.neighbors = np.asarray(neighbors, dtype=np.int64)
         self._resplice()
 
+    def set_accel_counts(self, accel_counts: Optional[Sequence[int]]) -> None:
+        """Install per-partition accelerator element counts (the hierarchical
+        level-2 solve output) and re-splice.  ``None`` reverts to the static
+        ``accel_fraction``.  Counts are clamped per node to the available
+        interior by the partition build, so a stale count after a level-1
+        resplice shrinks gracefully instead of erroring."""
+        if accel_counts is None:
+            self.accel_counts = None
+        else:
+            ac = np.asarray(accel_counts, dtype=np.int64)
+            if len(ac) != self.n_partitions:
+                raise ValueError(f"need {self.n_partitions} accel counts, got {len(ac)}")
+            if (ac < 0).any():
+                raise ValueError(f"accel counts must be non-negative, got {ac}")
+            self.accel_counts = ac
+        self._resplice()
+
     def _resplice(self) -> None:
         """Rebuild index arrays for the current counts.  Interior kernels are
         NOT recompiled: consumers key their jit caches on ``chunk_pads``."""
@@ -459,6 +479,7 @@ class NestedPartitionExecutor:
                 self.n_partitions,
                 accel_fraction=self.accel_fraction,
                 node_weights=np.maximum(self.counts, 0) if self.counts.sum() else None,
+                accel_counts=self.accel_counts,
                 neighbors=self.neighbors,
             )
             self.offsets = self.partition.offsets
@@ -600,7 +621,8 @@ class BlockedDGEngine:
     bitwise — the partition is a reordering, never an approximation.
     """
 
-    def __init__(self, solver, executor: NestedPartitionExecutor):
+    def __init__(self, solver, executor: NestedPartitionExecutor,
+                 only_blocks: Optional[Sequence[int]] = None):
         import jax
 
         if executor.grid_dims is None:
@@ -611,6 +633,10 @@ class BlockedDGEngine:
             )
         self.solver = solver
         self.executor = executor
+        # restrict this engine to a subset of partitions (a cluster node's
+        # engine only ever executes its own block): other entries stay None,
+        # so a resplice builds O(1) tables per engine instead of O(P)
+        self.only_blocks = None if only_blocks is None else set(int(p) for p in only_blocks)
         self.pads_seen: set = set()
         self._blocks: list = []
         self._jax = jax
@@ -636,32 +662,35 @@ class BlockedDGEngine:
         from repro.dg.operators import surface_rhs, volume_rhs
 
         s = self.solver
-        D, metrics, lift = s.D, s.metrics, s.lift
+        # one jitted bundle per solver, shared by every engine bound to it —
+        # a SimulatedCluster's N engines would otherwise recompile the same
+        # five kernels N times (jit caches live on the wrappers)
+        bundle = getattr(s, "_blocked_jit_bundle", None)
+        if bundle is None:
+            D, metrics, lift = s.D, s.metrics, s.lift
 
-        def gather(q, idx):
-            return q[idx]
+            def gather(q, idx):
+                return q[idx]
 
-        def assemble(q, own_idx, q_halo):
-            # own gather is node-local; concatenated with the exchanged halo
-            # this reproduces the extended block q[own ++ halo ++ pad]
-            return jnp.concatenate([q[own_idx], q_halo], axis=0)
+            def assemble(q, own_idx, q_halo):
+                # own gather is node-local; concatenated with the exchanged
+                # halo this reproduces the extended block q[own ++ halo ++ pad]
+                return jnp.concatenate([q[own_idx], q_halo], axis=0)
 
-        def interior(q, own_idx, rho, lam, mu):
-            return volume_rhs(q[own_idx], D, metrics, rho, lam, mu)
+            def interior(q, own_idx, rho, lam, mu):
+                return volume_rhs(q[own_idx], D, metrics, rho, lam, mu)
 
-        def boundary(qb, nbr_local, rho, lam, mu, cp, cs):
-            return surface_rhs(qb, nbr_local, lift, rho, lam, mu, cp, cs)
+            def boundary(qb, nbr_local, rho, lam, mu, cp, cs):
+                return surface_rhs(qb, nbr_local, lift, rho, lam, mu, cp, cs)
 
-        def fold(vol, sur):
-            # rows past the block's own count are dump rows (scattered to the
-            # sentinel); only the leading own rows must line up
-            return vol + sur[: vol.shape[0]]
+            def fold(vol, sur):
+                # rows past the block's own count are dump rows (scattered to
+                # the sentinel); only the leading own rows must line up
+                return vol + sur[: vol.shape[0]]
 
-        self._gather = jax.jit(gather)
-        self._assemble = jax.jit(assemble)
-        self._interior = jax.jit(interior)
-        self._boundary = jax.jit(boundary)
-        self._fold = jax.jit(fold)
+            bundle = tuple(jax.jit(f) for f in (gather, assemble, interior, boundary, fold))
+            s._blocked_jit_bundle = bundle
+        self._gather, self._assemble, self._interior, self._boundary, self._fold = bundle
 
     def _make_schedule(self) -> StepSchedule:
         """The block rhs as the shared four-phase schedule; ``state`` is
@@ -706,9 +735,9 @@ class BlockedDGEngine:
         bucket = self.executor.bucket
         dt = jnp.dtype(s.dtype)
         blocks = []
-        for node in part.nodes:
+        for p, node in enumerate(part.nodes):
             own = np.asarray(node.elements, dtype=np.int64)
-            if len(own) == 0:
+            if len(own) == 0 or (self.only_blocks is not None and p not in self.only_blocks):
                 blocks.append(None)
                 continue
             halo = np.asarray(node.halo, dtype=np.int64)
@@ -809,18 +838,37 @@ class BlockedDGEngine:
             out[p], _ = self._time(self.block_rhs, q, b, reps=reps)
         return out
 
-    def calibrate(self, q, reps: int = 2) -> CalibrationReport:
+    def calibrate(self, q, reps: int = 2, blocks: Optional[Sequence[int]] = None,
+                  observe: Optional[bool] = None) -> CalibrationReport:
         """The executor's phase (1): time the four schedule phases per
         partition — boundary (face flux), interior (volume), transfer (halo
         gather) and correction (halo fold) — so the planner can run the
-        overlap-aware solve (``NestedPartitionExecutor.plan_from_report``)."""
+        overlap-aware solve (``NestedPartitionExecutor.plan_from_report``).
+
+        ``blocks`` restricts the measurement to those partition indices (a
+        cluster node calibrating only its own block); rows not measured stay
+        zero.  ``observe`` defaults to full-fleet calibrations only: a
+        partial report must NOT enter the executor's EWMA (the unmeasured
+        partitions' 0.0s would read as infinitely fast and the equalizer
+        would dump all work on them), so requesting observe=True together
+        with a blocks subset is rejected — the caller (e.g.
+        ``SimulatedCluster``) assembles a fleet report first and observes
+        once."""
+        if observe is None:
+            observe = blocks is None
+        elif observe and blocks is not None:
+            raise ValueError(
+                "cannot observe a partial calibration (blocks subset): "
+                "unmeasured partitions would enter the EWMA as 0.0s"
+            )
         P = len(self._blocks)
         boundary = np.zeros(P)
         interior = np.zeros(P)
         transfer = np.zeros(P)
         correction = np.zeros(P)
+        picked = set(range(P)) if blocks is None else set(int(p) for p in blocks)
         for p, b in enumerate(self._blocks):
-            if b is None:
+            if b is None or p not in picked:
                 continue
             # each timed phase's output feeds the next phase, exactly like
             # the composed schedule — no kernel runs twice
@@ -840,5 +888,6 @@ class BlockedDGEngine:
             correction[p] = t_asm + t_fold
         report = CalibrationReport(boundary_s=boundary, interior_s=interior,
                                    transfer_s=transfer, correction_s=correction)
-        self.executor.observe(report.step_s)
+        if observe:
+            self.executor.observe(report.step_s)
         return report

@@ -144,8 +144,15 @@ class CalibrationReport:
     @staticmethod
     def median(reports: Sequence["CalibrationReport"]) -> "CalibrationReport":
         """Component-wise median over repeated calibration steps."""
+        # materialize first: a lazily-consumed iterable (generator) would
+        # slip past the emptiness check and surface as numpy's opaque
+        # "need at least one array to stack" from np.stack below
+        reports = list(reports)
         if not reports:
-            raise ValueError("need at least one report")
+            raise ValueError(
+                "CalibrationReport.median needs at least one report "
+                "(got an empty sequence — did calibration run zero steps?)"
+            )
         return CalibrationReport(
             boundary_s=np.median(np.stack([r.boundary_s for r in reports]), axis=0),
             interior_s=np.median(np.stack([r.interior_s for r in reports]), axis=0),

@@ -1,0 +1,318 @@
+"""Cluster-level nested partitioning: the Morton inter-node splice
+(``ClusterPartition``), the hierarchical two-level solve, and the simulated
+heterogeneous cluster (``SimulatedCluster``).
+
+Property-based invariants (hypothesis, skipped gracefully when absent):
+  * node element sets are a disjoint cover of the mesh;
+  * each node's set is contiguous in Morton curve order;
+  * every node's boundary/interior/halo sets remain a validated disjoint
+    cover under random meshes, node counts and weights.
+
+Differential invariant: the N-node ``SimulatedCluster`` step matches the
+flat single-partition solver bitwise on periodic meshes — the cluster level
+is a reordering, never an approximation (the same invariant
+``tests/test_executor.py`` pins for the single-node engine).
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_shim import given, settings, st
+
+from repro.core import (
+    build_cluster_partition,
+    curve_rank,
+    face_cut_matrix,
+    face_neighbors,
+    is_curve_contiguous,
+    morton_order,
+    node_weights_from_devices,
+)
+from repro.core.topology import STAMPEDE_MIC, STAMPEDE_SNB_SOCKET
+
+grids = st.tuples(st.integers(2, 6), st.integers(2, 6), st.integers(2, 6))
+
+
+# ---------------------------------------------------------------------------
+# Morton curve helpers
+# ---------------------------------------------------------------------------
+
+
+def test_curve_rank_is_inverse_permutation():
+    order = morton_order((4, 3, 2))
+    rank = curve_rank(order)
+    np.testing.assert_array_equal(order[rank], np.arange(24))
+    np.testing.assert_array_equal(rank[order], np.arange(24))
+
+
+def test_is_curve_contiguous():
+    order = morton_order((4, 4, 2))
+    assert is_curve_contiguous(order, order[5:17])  # a curve run
+    assert is_curve_contiguous(order, order[:0])  # empty set is trivially so
+    assert not is_curve_contiguous(order, order[[0, 2]])  # gap on the curve
+
+
+# ---------------------------------------------------------------------------
+# ClusterPartition invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+@given(grids, st.integers(1, 6), st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_cluster_partition_invariants(grid, n_nodes, frac):
+    """Random meshes and node counts: disjoint cover, curve contiguity,
+    per-node boundary/interior/halo validated covers."""
+    K = int(np.prod(grid))
+    n_nodes = min(n_nodes, K)
+    part = build_cluster_partition(grid, n_nodes, accel_fraction=frac)
+    part.validate()  # cover + contiguity + splice-follows-weights + nested
+    # explicit disjoint-cover re-check (independent of validate's internals)
+    counts = np.zeros(K, dtype=np.int64)
+    for npart in part.nodes:
+        counts[npart.elements] += 1
+        assert is_curve_contiguous(part.order, npart.elements)
+        both = np.concatenate([npart.boundary, npart.interior])
+        assert len(np.unique(both)) == len(both)
+        np.testing.assert_array_equal(np.sort(both), np.sort(npart.elements))
+        if npart.halo is not None and len(npart.halo):
+            assert (part.node_of[npart.halo] != npart.node).all()
+    assert (counts == 1).all()
+
+
+@given(grids, st.lists(st.floats(0.1, 10.0), min_size=1, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_cluster_partition_weighted_invariants(grid, weights):
+    """Heterogeneous (throughput-weighted) splices keep every invariant and
+    track the weights to within the largest-remainder bound."""
+    K = int(np.prod(grid))
+    if K < len(weights):
+        weights = weights[:K]
+    part = build_cluster_partition(grid, node_weights=weights, accel_fraction=0.3)
+    part.validate()
+    sizes = np.array([n.n_elements for n in part.nodes])
+    ideal = K * np.asarray(weights) / np.sum(weights)
+    assert np.abs(sizes - ideal).max() < 1.0 + 1e-9
+
+
+def test_cluster_partition_from_device_classes():
+    """Level-0 weights from per-node DeviceClass throughput: the faster
+    device class owns proportionally more of the curve."""
+    w = node_weights_from_devices([STAMPEDE_SNB_SOCKET, STAMPEDE_MIC])
+    assert w[1] > w[0]  # the MIC's sustained flops exceed the socket's
+    np.testing.assert_allclose(w.sum(), 1.0)
+    part = build_cluster_partition((6, 6, 4), node_devices=[STAMPEDE_SNB_SOCKET, STAMPEDE_MIC])
+    part.validate()
+    sizes = [n.n_elements for n in part.nodes]
+    assert sizes[1] > sizes[0]
+    with pytest.raises(ValueError):
+        build_cluster_partition((4, 4, 4), node_devices=[STAMPEDE_MIC], node_weights=[1.0])
+    with pytest.raises(ValueError):
+        build_cluster_partition((4, 4, 4))  # no node count at all
+
+
+def test_face_cut_matrix_symmetry_and_halo_bytes():
+    """Structured meshes: every cross-node face is seen from both sides, so
+    the cut matrix is symmetric, has an empty diagonal, and prices the halo."""
+    grid = (6, 4, 4)
+    part = build_cluster_partition(grid, 4)
+    M = part.face_cuts()
+    np.testing.assert_array_equal(M, M.T)
+    assert (np.diag(M) == 0).all()
+    # consistency with the per-node halo: a node with exchange partners has
+    # nonzero priced bytes and at least one peer
+    nbytes = part.halo_bytes(order=3)
+    peers = part.halo_peers()
+    for i in range(4):
+        assert (nbytes[i] > 0) == (peers[i] > 0) == (M[i].sum() > 0)
+    # the raw helper agrees with the partition's own neighbour table
+    M2 = face_cut_matrix(part.node_of, face_neighbors(grid), 4)
+    np.testing.assert_array_equal(M, M2)
+
+
+def test_single_node_cluster_has_no_cuts():
+    part = build_cluster_partition((4, 4, 2), 1, accel_fraction=0.5)
+    part.validate()
+    assert part.face_cuts().sum() == 0
+    assert part.halo_bytes(order=3).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical solve (golden values on the paper's profile live in
+# test_core.py; here: plumbing into the cluster partition)
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_split_builds_valid_cluster_partition():
+    from repro.core import NodeModel, solve_hierarchical
+    from repro.core.cost_model import stampede_node_models
+
+    t_cpu, t_mic, xfer = stampede_node_models(order=7)
+    nodes = [NodeModel(t_host=t_cpu, t_accel=t_mic, transfer=xfer)] * 4
+    hs = solve_hierarchical(nodes, 512)
+    part = build_cluster_partition(
+        (8, 8, 8), node_weights=np.maximum(hs.node_counts, 1e-9),
+        accel_counts=hs.accel_counts,
+    )
+    part.validate()
+    np.testing.assert_array_equal(
+        [n.n_elements for n in part.nodes], hs.node_counts
+    )
+    # solved accel blocks land in the partition (clamped to interior)
+    for npart, ka in zip(part.nodes, hs.accel_counts):
+        assert len(npart.accel) == min(ka, len(npart.interior))
+
+
+# ---------------------------------------------------------------------------
+# SimulatedCluster: differential bitwise invariant + two-level loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def periodic_setup():
+    import jax.numpy as jnp
+
+    from repro.dg.mesh import make_brick
+    from repro.dg.solver import DGSolver
+
+    mesh = make_brick((4, 4, 2), (1.0, 1.0, 0.5), periodic=True)
+    K = mesh.K
+    solver = DGSolver(mesh=mesh, order=2, rho=np.ones(K), lam=np.ones(K), mu=np.zeros(K))
+    rng = np.random.default_rng(0)
+    q0 = jnp.asarray(rng.standard_normal((K, 9, solver.M, solver.M, solver.M)))
+    return solver, q0
+
+
+def _flat_reference(solver, q0, n_steps, dt):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dg.rk import lsrk45_step
+
+    rhs = jax.jit(solver.rhs)
+    q, res = q0, jnp.zeros_like(q0)
+    for _ in range(n_steps):
+        q, res = lsrk45_step(q, res, rhs, dt)
+    return q
+
+
+def test_cluster_rhs_matches_flat_bitwise_on_periodic_mesh(periodic_setup):
+    """Acceptance: the N-node cluster step equals the flat solver bitwise on
+    a periodic mesh (wrap-around cross-node faces enter the halos)."""
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster
+
+    solver, q0 = periodic_setup
+    cl = SimulatedCluster(solver, [NodeProfile(name=f"n{i}") for i in range(3)])
+    cl.cluster_partition().validate()
+    r_flat = np.asarray(solver.rhs(q0))
+    r_cl = np.asarray(cl.rhs(q0))
+    assert (r_flat == r_cl).all(), np.abs(r_flat - r_cl).max()
+
+
+def test_cluster_run_matches_flat_after_rebalance(periodic_setup):
+    """The differential invariant survives the online loop: observe
+    simulated heterogeneous times, rebalance the inter-node splice, step —
+    still bitwise (up to float reassociation across steps, as in
+    test_executor.py)."""
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster
+
+    solver, q0 = periodic_setup
+    # speed ratio 1:3 so the common-finish split (8, 24) sits exactly on
+    # bucket multiples — K=32 is too coarse to represent e.g. 1:2 within 10%
+    cl = SimulatedCluster(solver, [NodeProfile(speed=1.0), NodeProfile(speed=3.0)])
+    rounds = cl.run_until_balanced(rtol=0.10, max_rounds=8)
+    assert rounds <= 3, rounds
+    assert cl.counts[1] > cl.counts[0]  # the 3x node absorbed work
+    assert cl.counts[1] / max(1, cl.counts[0]) == pytest.approx(3.0, rel=0.35)
+    cl.cluster_partition().validate()
+
+    dt = solver.cfl_dt()
+    q_flat = np.asarray(_flat_reference(solver, q0, 2, dt))
+    q_cl = np.asarray(cl.run(q0, 2, dt=dt))
+    np.testing.assert_allclose(q_cl, q_flat, rtol=1e-12, atol=1e-14)
+    # single rhs evaluation stays exactly bitwise
+    assert (np.asarray(solver.rhs(q0)) == np.asarray(cl.rhs(q0))).all()
+
+
+def test_cluster_straggler_hook_rebalances(periodic_setup):
+    """The existing straggler hook at cluster level: a slow node sheds work
+    through the same equalizer (3x so the optimum is bucket-representable)."""
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster
+
+    solver, q0 = periodic_setup
+    cl = SimulatedCluster(solver, [NodeProfile(), NodeProfile()])
+    cl.inject_straggler(0, 3.0)
+    rounds = cl.run_until_balanced(rtol=0.10, max_rounds=8)
+    assert rounds <= 4, rounds
+    assert cl.counts[0] < cl.counts[1]
+    assert (np.asarray(solver.rhs(q0)) == np.asarray(cl.rhs(q0))).all()
+
+
+def test_cluster_two_level_resolve(periodic_setup):
+    """resolve() re-solves both levels from a per-node CalibrationReport:
+    level 1 moves the inter-node splice, level 2 installs per-node accel
+    counts — and the partition stays valid and bitwise."""
+    from repro.runtime.cluster import SimulatedCluster, stampede_profile
+
+    solver, q0 = periodic_setup
+    cl = SimulatedCluster(
+        solver, [stampede_profile(order=2, name=f"n{i}") for i in range(2)]
+    )
+    rep = cl.calibrate(q0, reps=1)
+    assert (rep.step_s > 0).all()
+    # the wire model enters the transfer phase
+    assert (rep.transfer_s >= cl.comm_times()).all()
+    plan = cl.resolve(rep)
+    assert int(plan.counts.sum()) == solver.mesh.K
+    assert cl.executor.accel_counts is not None  # level 2 ran
+    cl.cluster_partition().validate()
+    assert (np.asarray(solver.rhs(q0)) == np.asarray(cl.rhs(q0))).all()
+
+
+def test_cluster_summary_and_plan_format(periodic_setup):
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster, format_cluster_plan
+
+    solver, _ = periodic_setup
+    cl = SimulatedCluster(solver, [NodeProfile(name="a"), NodeProfile(name="b", speed=2.0)])
+    s = cl.summary()
+    assert "a[0]" in s and "b[1]" in s and "comm=" in s
+    plan = format_cluster_plan((8, 8, 4), 4, order=7)
+    assert "level 0 (Morton inter-node splice)" in plan
+    assert plan.count("node") >= 4 and "K_acc/K_host=" in plan
+    het = format_cluster_plan((8, 8, 4), 2, order=7, speeds=[1.0, 2.0])
+    assert "speed 2" in het
+    with pytest.raises(ValueError):
+        format_cluster_plan((8, 8, 4), 2, speeds=[1.0])
+
+
+def test_cluster_rejects_bad_profiles(periodic_setup):
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster
+
+    solver, _ = periodic_setup
+    with pytest.raises(ValueError):
+        SimulatedCluster(solver, [])
+    with pytest.raises(ValueError):
+        NodeProfile(speed=0.0)
+    cl = SimulatedCluster(solver, [NodeProfile()])
+    with pytest.raises(RuntimeError):
+        cl.node_models()  # profile carries no calibrated models
+
+
+# ---------------------------------------------------------------------------
+# Executor: per-partition accel counts (the level-2 installation path)
+# ---------------------------------------------------------------------------
+
+
+def test_executor_set_accel_counts_resplices():
+    from repro.runtime.executor import NestedPartitionExecutor
+
+    ex = NestedPartitionExecutor(512, 2, grid_dims=(8, 8, 8), bucket=8)
+    ex.set_accel_counts([60, 40])
+    for p, want in zip(ex.partition.nodes, (60, 40)):
+        assert len(p.accel) == min(want, len(p.interior))
+    ex.partition.validate()
+    with pytest.raises(ValueError):
+        ex.set_accel_counts([1, 2, 3])  # wrong arity
+    with pytest.raises(ValueError):
+        ex.set_accel_counts([-1, 4])
+    ex.set_accel_counts(None)  # revert to accel_fraction (0.0)
+    assert ex.partition.accel_mask.sum() == 0

@@ -1,38 +1,9 @@
 """Core nested-partition library: invariants, load balancing, cost models."""
 
-import types
-
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:
-    # Degrade gracefully: property tests skip, example-based tests still run.
-    HAVE_HYPOTHESIS = False
-
-    def given(*_args, **_kwargs):
-        def deco(fn):
-            # plain zero-arg replacement: pytest must not see the property
-            # arguments (it would look for fixtures of the same name)
-            def skipper():
-                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
-
-            skipper.__name__ = fn.__name__
-            skipper.__doc__ = fn.__doc__
-            return skipper
-
-        return deco
-
-    def settings(*_args, **_kwargs):
-        return lambda fn: fn
-
-    def _stub(*_args, **_kwargs):
-        return None
-
-    st = types.SimpleNamespace(tuples=_stub, integers=_stub, floats=_stub, lists=_stub)
+from hypothesis_shim import given, settings, st
 
 from repro.core import (
     build_nested_partition,
@@ -293,6 +264,104 @@ def test_rebalance_converges_on_injected_straggler():
         counts = np.diff(splice(K, weights))
     makespan = float((counts / speeds).max())
     assert makespan <= 1.10 * optimum, (makespan, optimum)
+
+
+# --- solve_hierarchical: the cluster level, golden values ------------------
+
+
+def _stampede_nodes(n, order=7, inter=None):
+    from repro.core import NodeModel
+
+    t_cpu, t_mic, xfer = stampede_node_models(order)
+    return [NodeModel(t_host=t_cpu, t_accel=t_mic, transfer=xfer,
+                      inter_transfer=inter)] * n
+
+
+def test_hierarchical_reproduces_paper_ratio_for_any_node_count():
+    """Golden value: the published per-node optimum K_MIC/K_CPU ~= 1.6 is a
+    *node* property — the hierarchical solve must reproduce it regardless of
+    how many nodes the fleet has."""
+    from repro.core import solve_hierarchical
+
+    for n in (1, 2, 4, 8):
+        hs = solve_hierarchical(_stampede_nodes(n), 8192)
+        assert sum(hs.node_counts) == 8192
+        for r in hs.ratios:
+            assert 1.45 <= r <= 1.85, (n, r)
+        # uniform nodes -> near-uniform level-1 split
+        assert max(hs.node_counts) - min(hs.node_counts) <= 1
+
+
+def test_hierarchical_makespan_monotone_in_nodes():
+    """Golden shape: on uniform work the modeled makespan decreases strictly
+    monotonically as nodes are added (strong scaling of the model)."""
+    from repro.core import solve_hierarchical
+
+    prev = None
+    for n in (1, 2, 4, 8, 16):
+        hs = solve_hierarchical(_stampede_nodes(n), 8192)
+        if prev is not None:
+            assert hs.makespan < prev, (n, hs.makespan, prev)
+        prev = hs.makespan
+
+
+def test_hierarchical_n1_equals_single_node_two_way():
+    """The N=1 hierarchical solve IS the existing single-node calibrated
+    solve — same split, same makespan."""
+    from repro.core import solve_hierarchical
+
+    t_cpu, t_mic, xfer = stampede_node_models(order=7)
+    two_way = solve_two_way(t_cpu, t_mic, 8192, transfer=xfer)
+    hs = solve_hierarchical(_stampede_nodes(1), 8192)
+    assert hs.node_counts == (8192,)
+    assert hs.node_splits[0].counts == two_way.counts
+    assert hs.makespan == pytest.approx(two_way.makespan, rel=1e-12)
+
+
+def test_hierarchical_heterogeneous_nodes_split_by_throughput():
+    """A node twice as fast (host and accel both) gets ~2x the elements at
+    level 1, and both nodes keep the per-node optimum at level 2."""
+    from repro.core import NodeModel, solve_hierarchical
+
+    t_cpu, t_mic, xfer = stampede_node_models(order=7)
+    fast = NodeModel(t_host=lambda k: t_cpu(k) / 2, t_accel=lambda k: t_mic(k) / 2,
+                     transfer=xfer)
+    slow = NodeModel(t_host=t_cpu, t_accel=t_mic, transfer=xfer)
+    hs = solve_hierarchical([slow, fast], 8192)
+    assert hs.node_counts[1] / hs.node_counts[0] == pytest.approx(2.0, rel=0.15)
+    assert hs.imbalance < 1.05
+
+
+def test_hierarchical_host_only_node_degenerates():
+    """A node without an accelerator is a valid degenerate NodeModel: its
+    inner split offloads nothing and its time model is plain t_host."""
+    from repro.core import NodeModel, solve_hierarchical
+
+    nodes = [NodeModel(t_host=lambda k: k * 1e-6),
+             NodeModel(t_host=lambda k: k * 1e-6, t_accel=lambda k: k * 1e-6)]
+    hs = solve_hierarchical(nodes, 1000)
+    assert hs.node_splits[0].counts[1] == 0  # nothing offloaded
+    assert hs.node_counts[1] > hs.node_counts[0]  # the accel node is faster
+    assert sum(hs.node_counts) == 1000
+    with pytest.raises(ValueError):
+        solve_hierarchical([], 100)
+
+
+def test_weak_scaling_benchmark_n1_anchors_to_single_node():
+    """Acceptance: the table6_1 weak-scaling N=1 row matches the existing
+    single-node calibrated makespan, and speedup decays monotonically as
+    communication enters."""
+    from benchmarks.table6_1_speedup import weak_scaling_rows
+
+    t_cpu, t_mic, xfer = stampede_node_models(order=7)
+    single = solve_two_way(t_cpu, t_mic, 8192, transfer=xfer).makespan
+    rows = weak_scaling_rows(node_counts=(1, 2, 4))
+    n1 = rows[0]
+    assert n1[0] == 1
+    assert n1[2] == pytest.approx(single, rel=1e-9)
+    speedups = [b / o for _, b, o, _ in rows]
+    assert all(s > 1.0 for s in speedups)
+    assert speedups == sorted(speedups, reverse=True)  # decays with nodes
 
 
 def test_surface_vs_volume_transfer():

@@ -111,6 +111,21 @@ def test_report_median():
     c = CalibrationReport.from_totals([2.0, 9.0])
     med = CalibrationReport.median([a, b, c])
     np.testing.assert_allclose(med.interior_s, [2.0, 5.0])
+    # a lazily-consumed iterable works too (it is materialized internally)
+    med2 = CalibrationReport.median(r for r in (a, b, c))
+    np.testing.assert_allclose(med2.interior_s, med.interior_s)
+
+
+def test_report_median_empty_raises_clear_error():
+    """Regression: an empty input must raise a clear ValueError, not numpy's
+    opaque 'need at least one array to stack' — including the generator
+    case that used to slip past the truthiness check."""
+    with pytest.raises(ValueError, match="at least one report"):
+        CalibrationReport.median([])
+    with pytest.raises(ValueError, match="at least one report"):
+        CalibrationReport.median(r for r in [])
+    with pytest.raises(ValueError, match="at least one report"):
+        CalibrationReport.median(iter(()))
 
 
 def test_report_summary_has_overlap_efficiency_column():
