@@ -16,6 +16,7 @@ def main() -> None:
         fig5_2_load_fraction,
         fig5_3_transfer,
         fig6_2_kernels,
+        pipeline_throughput,
         table6_1_speedup,
     )
 
@@ -25,6 +26,7 @@ def main() -> None:
         "fig5_3": fig5_3_transfer.run,
         "table6_1": table6_1_speedup.run,
         "fig6_2": fig6_2_kernels.run,
+        "pipeline": pipeline_throughput.run,
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("suites", nargs="*", default=[],

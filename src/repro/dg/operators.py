@@ -157,8 +157,15 @@ def surface_rhs(
     mu: jnp.ndarray,
     cp: jnp.ndarray,
     cs: jnp.ndarray,
+    kernel_impl: str = "xla",
 ) -> jnp.ndarray:
-    """int_flux + bound_flux + lift: Riemann corrections on all 6 faces."""
+    """int_flux + bound_flux + lift: Riemann corrections on all 6 faces.
+
+    ``kernel_impl`` selects the Riemann-flux body: ``xla`` is the jnp
+    reference, ``pallas``/``interpret`` run ``dg_flux_pallas`` (the paper's
+    int_flux/godonov_flux hot-spot as a TPU kernel) — one instantiation per
+    face direction, exactly the solver's face loop.
+    """
     S = stress(q, lam, mu)
     out = jnp.zeros_like(q)
     mats = {"rho": rho, "cp": cp, "cs": cs, "mu": mu}
@@ -183,7 +190,18 @@ def surface_rhs(
         mat_m = mats
         mat_p = {k: jnp.where(has_nbr, v[nbr_safe], v) for k, v in mats.items()}
 
-        FE, Fv = riemann_correction(Sm, vm, Sp, vp, ax, sign, mat_m, mat_p)
+        if kernel_impl == "xla":
+            FE, Fv = riemann_correction(Sm, vm, Sp, vp, ax, sign, mat_m, mat_p)
+        else:  # pallas | interpret — the flux kernel behind the same switch
+            from repro.kernels.dg_flux import dg_flux_pallas
+
+            mats8 = jnp.stack(
+                [mat_m["rho"], mat_m["cp"], mat_m["cs"], mat_m["mu"],
+                 mat_p["rho"], mat_p["cp"], mat_p["cs"], mat_p["mu"]],
+                axis=1,
+            )
+            FE, Fv = dg_flux_pallas(Sm, vm, Sp, vp, mats8, ax, sign,
+                                    interpret=(kernel_impl == "interpret"))
         corr = jnp.concatenate([FE, Fv / rho[:, None, None, None]], axis=1)  # Q^-1 on v rows
         corr = -lift[ax] * corr
         corr = jnp.where(skip[:, None, None, None], 0.0, corr)
@@ -198,12 +216,18 @@ def surface_rhs(
     return out
 
 
-def dg_rhs(q, D, metrics, lift, neighbors, rho, lam, mu, cp, cs, kernel_impl: str = "xla"):
+def volume_rhs_impl(q, D, metrics, rho, lam, mu, kernel_impl: str = "xla"):
+    """``volume_rhs`` behind the kernel switch: ``xla`` is the jnp reference,
+    ``pallas``/``interpret`` run the paper's volume_loop as a TPU kernel."""
     if kernel_impl == "xla":
-        vol = volume_rhs(q, D, metrics, rho, lam, mu)
-    else:  # pallas | interpret — the paper's volume_loop as a TPU kernel
-        from repro.kernels.dg_volume import dg_volume_pallas
+        return volume_rhs(q, D, metrics, rho, lam, mu)
+    from repro.kernels.dg_volume import dg_volume_pallas
 
-        vol = dg_volume_pallas(q, D, metrics, rho, lam, mu,
-                               interpret=(kernel_impl == "interpret"))
-    return vol + surface_rhs(q, neighbors, lift, rho, lam, mu, cp, cs)
+    return dg_volume_pallas(q, D, metrics, rho, lam, mu,
+                            interpret=(kernel_impl == "interpret"))
+
+
+def dg_rhs(q, D, metrics, lift, neighbors, rho, lam, mu, cp, cs, kernel_impl: str = "xla"):
+    vol = volume_rhs_impl(q, D, metrics, rho, lam, mu, kernel_impl=kernel_impl)
+    return vol + surface_rhs(q, neighbors, lift, rho, lam, mu, cp, cs,
+                             kernel_impl=kernel_impl)

@@ -50,7 +50,7 @@ from repro.dg.operators import (
     riemann_correction,
     stress,
     surface_rhs,
-    volume_rhs,
+    volume_rhs_impl,
 )
 from repro.dg.rk import lsrk45_step
 from repro.dg.solver import DGSolver
@@ -192,10 +192,14 @@ class PartitionedDG:
             return dict(send, from_prev=from_prev, from_next=from_next)
 
         def interior(st):
-            # volume + intra-slab fluxes: no dependence on the ring payload
-            out = volume_rhs(st["q"], s.D, s.metrics, st["rho"], st["lam"], st["mu"])
+            # volume + intra-slab fluxes: no dependence on the ring payload;
+            # kernel_impl threads through so the Pallas volume/flux kernels
+            # run inside the SPMD slab path too
+            out = volume_rhs_impl(st["q"], s.D, s.metrics, st["rho"], st["lam"],
+                                  st["mu"], kernel_impl=s.kernel_impl)
             return out + surface_rhs(st["q"], nbr, s.lift, st["rho"], st["lam"],
-                                     st["mu"], st["cp"], st["cs"])
+                                     st["mu"], st["cp"], st["cs"],
+                                     kernel_impl=s.kernel_impl)
 
         def correction(out, recv, st):
             idx = jax.lax.axis_index(self.axis)

@@ -11,6 +11,12 @@ VMEM per step: (BF=128 faces) x (2x9 fields + out) x 64 lanes x 4 B ~= 0.9 MiB.
 
 Validated against ``ref.dg_flux_ref`` in interpret mode across orders,
 dtypes, and acoustic/elastic/coupled material draws.
+
+Reached from the solver via the ``kernel_impl`` switch
+(``dg.operators.surface_rhs(kernel_impl="pallas"|"interpret")``): one
+instantiation per face direction inside the solver's face loop, on the flat
+rhs, the SPMD slab interior, the blocked engine's correction phase, and the
+fused step pipeline (``runtime.pipeline``) alike.
 """
 
 from __future__ import annotations

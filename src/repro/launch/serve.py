@@ -11,6 +11,12 @@ online), and the serving pass uses the calibrated counts.  With
 ``--partitions 1`` (default) the flow is the classic single-batch path, but
 still driven through the executor's step API.
 
+The greedy decode loop itself is fused by default (``--fused-decode``): the
+whole generation is one ``lax.scan``-compiled, cache-donating device
+program — 1 host dispatch per sub-batch instead of one per token — the
+serving-side twin of the blocked engine's ``FusedStepPipeline``.
+``--no-fused-decode`` restores the per-token Python loop.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --batch 4 --prompt-len 64 --gen 32 --partitions 2
 """
@@ -44,6 +50,10 @@ def main():
                     help="virtual partitions the request batch is spliced over")
     ap.add_argument("--calib-gen", type=int, default=4,
                     help="decode steps per partition in the calibration pass")
+    ap.add_argument("--fused-decode", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="scan-compile the greedy decode loop into one "
+                         "donated dispatch per sub-batch (default on)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -63,8 +73,26 @@ def main():
     prompts = g.integers(0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
 
     sh = make_shardings(lm, mesh, kind="decode", batch_shardable=False)
-    serve_step = jax.jit(make_serve_step(lm, sh), donate_argnums=(1,))
+    raw_step = make_serve_step(lm, sh)
+    serve_step = jax.jit(raw_step, donate_argnums=(1,))
     prefill = jax.jit(lambda p, b: lm.prefill(p, b, max_len=args.prompt_len + args.gen + 8))
+
+    from functools import partial
+
+    @partial(jax.jit, static_argnums=(2,), donate_argnums=(1,))
+    def decode_scan(p, carry, n):
+        """n greedy decode steps as ONE program: lax.scan over tokens with
+        the (cache, tok) carry donated.  The final cache is returned (even
+        though serving discards it) so every donated leaf aliases an output
+        — otherwise jax warns 'donated buffers were not usable' per run."""
+
+        def body(carry, _):
+            cache, tok = carry
+            tok, cache = raw_step(p, cache, tok)
+            return (cache, tok), tok
+
+        (cache, tok), toks = jax.lax.scan(body, carry, None, length=n)
+        return toks, tok, cache
 
     def decode_rows(rows: np.ndarray, n_gen: int):
         """Prefill + greedy-decode a sub-batch; returns
@@ -77,10 +105,15 @@ def main():
         t_prefill = time.time() - t0
         out = [np.asarray(tok)]
         t1 = time.time()
-        for _ in range(n_gen - 1):
-            tok, cache = serve_step(params, cache, tok)
-            out.append(np.asarray(tok))
-        jax.block_until_ready(tok)
+        if args.fused_decode and n_gen > 1:
+            toks, tok, _ = decode_scan(params, (cache, tok), n_gen - 1)
+            jax.block_until_ready(toks)
+            out.extend(np.asarray(toks))  # (n_gen-1, B) rows
+        else:
+            for _ in range(n_gen - 1):
+                tok, cache = serve_step(params, cache, tok)
+                out.append(np.asarray(tok))
+            jax.block_until_ready(tok)
         return np.stack(out, axis=1), t_prefill, time.time() - t1
 
     P = max(1, min(args.partitions, args.batch))
@@ -88,15 +121,21 @@ def main():
 
     warmed = set()
 
-    def warm(offsets):
-        """Compile every sub-batch shape before it is timed: 3 steps cover
-        prefill plus both decode cache layouts (the donated cache changes
-        layout after the first serve_step call)."""
+    def warm(offsets, n_gen=3):
+        """Compile every sub-batch shape before it is timed.  Unfused: 3
+        steps cover prefill plus both decode cache layouts (the donated
+        cache changes layout after the first serve_step call).  Fused: the
+        scan length is part of the compiled program, so warm with the real
+        generation length — this executes one throwaway full generation per
+        distinct shape (AOT ``lower().compile()`` would avoid the execution
+        but does not populate jit's dispatch cache), the standard
+        warmup-for-steady-state tradeoff; the timed pass stays compile-free."""
+        n = n_gen if args.fused_decode else 3
         for p in range(P):
             rows = prompts[offsets[p]:offsets[p + 1]]
-            if len(rows) and len(rows) not in warmed:
-                decode_rows(rows, 3)
-                warmed.add(len(rows))
+            if len(rows) and (len(rows), n) not in warmed:
+                decode_rows(rows, n)
+                warmed.add((len(rows), n))
 
     if P > 1:
         # calibration pass: time each partition's phases on the current
@@ -106,7 +145,7 @@ def main():
         t_prefill = np.zeros(P)
         t_decode = np.zeros(P)
         offs = executor.offsets
-        warm(offs)
+        warm(offs, max(2, args.calib_gen))
         for p in range(P):
             rows = prompts[offs[p]:offs[p + 1]]
             if len(rows) == 0:
@@ -122,10 +161,11 @@ def main():
         print(f"calibrated split: counts={executor.counts.tolist()} "
               f"(round {executor.round}, predicted makespan "
               f"{executor.predicted_makespan() * 1e3:.1f}ms)")
-        warm(executor.offsets)  # the re-solved counts may be new shapes
 
     # serving pass on the (re)calibrated splice; contiguous splice keeps the
-    # original row order under concatenation
+    # original row order under concatenation.  Warm unconditionally (P=1
+    # included) so the timed pass never measures prefill/scan compilation.
+    warm(executor.offsets, args.gen)
     parts, per_part = [], []
     t_prefill_all, t_decode_all = 0.0, 0.0
     offs = executor.offsets
@@ -143,9 +183,12 @@ def main():
     assert gen.shape == (args.batch, args.gen)
     assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
     per_tok = t_decode_all / max(1, args.gen - 1)
+    disp = 1 if args.fused_decode else args.gen - 1
     print(f"arch={cfg.arch_id} batch={args.batch} partitions={P} "
           f"prefill({args.prompt_len} tok)={t_prefill_all * 1e3:.1f}ms "
-          f"decode={per_tok * 1e3:.2f} ms/step throughput={args.batch / per_tok:.1f} tok/s")
+          f"decode={per_tok * 1e3:.2f} ms/step throughput={args.batch / per_tok:.1f} tok/s "
+          f"decode-dispatches/sub-batch={disp} "
+          f"({'fused scan' if args.fused_decode else 'python loop'})")
     for p, n, dt in per_part:
         print(f"  partition {p}: rows={n} wall={dt * 1e3:.1f}ms")
     print("sample:", gen[0, :16].tolist())

@@ -15,7 +15,17 @@ persistence).  On this synchronous single-process path the attribution is
 uniform, so the split is advisory until per-device step times exist; the
 asymmetric execution lives in ``BlockedDGEngine`` / ``launch.serve``.
 
+``--fused-steps N`` scan-compiles N optimizer steps into ONE donated device
+dispatch (batches for the chunk are stacked and scanned over — the training
+twin of the blocked engine's ``FusedStepPipeline``); the supervisor then
+drives chunks, so retries and rebalances happen at chunk granularity.
+``--steps`` must be divisible by N, and step-indexed fault tolerance
+(``--fail-at`` / ``--ckpt-dir``) is refused under fusion because those
+flags are optimizer-step indexed.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+      --steps 20 --fused-steps 5                  # 4 dispatches total
   PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --smoke \
       --steps 30 --fail-at 12 --ckpt-every 5      # exercises restart
 """
@@ -63,7 +73,35 @@ def build(args):
         out_shardings=(sh.params, sh.opt, None),
         donate_argnums=(0, 1),
     )
-    return cfg, shape, lm, jitted, accum, micro, dp
+    jitted_chunk = None
+    if getattr(args, "fused_steps", 1) > 1:
+        # N optimizer steps as ONE donated program: lax.scan over a stacked
+        # batch chunk with the (params, opt) carry donated — per-step
+        # metrics come back stacked along the scan axis
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        batch_sh = jax.tree.map(
+            lambda s: NamedSharding(s.mesh, PartitionSpec(None, *s.spec)),
+            sh.batch,
+            is_leaf=lambda x: isinstance(x, NamedSharding),
+        )
+
+        def chunk_fn(params, opt_state, batches):
+            def body(carry, batch):
+                p, o = carry
+                p, o, metrics = step_fn(p, o, batch)
+                return (p, o), metrics
+
+            (params, opt_state), ms = jax.lax.scan(body, (params, opt_state), batches)
+            return params, opt_state, ms
+
+        jitted_chunk = jax.jit(
+            chunk_fn,
+            in_shardings=(sh.params, sh.opt, batch_sh),
+            out_shardings=(sh.params, sh.opt, None),
+            donate_argnums=(0, 1),
+        )
+    return cfg, shape, lm, jitted, jitted_chunk, accum, micro, dp
 
 
 def main():
@@ -81,6 +119,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, default=None, help="inject a failure at step N")
+    ap.add_argument("--fused-steps", type=int, default=1,
+                    help="optimizer steps fused into one scan-compiled donated "
+                         "dispatch (supervisor retries/ckpts act per chunk)")
     ap.add_argument("--rebalance-every", type=int, default=10,
                     help="online-executor rebalance cadence (steps)")
     ap.add_argument("--plan-cache", default=None,
@@ -89,7 +130,18 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg, shape, lm, jitted, accum, micro, dp = build(args)
+    N = max(1, args.fused_steps)
+    if args.steps % N:
+        raise SystemExit(f"--steps {args.steps} not divisible by --fused-steps {N}")
+    if N > 1 and (args.fail_at is not None or args.ckpt_dir is not None):
+        # the supervisor counts chunks when steps are fused, so step-indexed
+        # failure injection and checkpoint step numbers would silently change
+        # units (a ckpt saved at chunk 4 is optimizer step 4*N) — refuse
+        # rather than misbehave until chunk-granularity FT is wired up
+        raise SystemExit("--fused-steps > 1 is incompatible with --fail-at/"
+                         "--ckpt-dir (checkpoint/failure steps are optimizer-"
+                         "step indexed; fused chunks change the unit)")
+    cfg, shape, lm, jitted, jitted_chunk, accum, micro, dp = build(args)
     key = jax.random.PRNGKey(args.seed)
     params = lm.init(key)
     opt_state = init_opt_state(params)
@@ -110,11 +162,22 @@ def main():
     metrics_log = []
 
     def batch_fn(step: int) -> Dict[str, Any]:
-        return make_batch(cfg, shape, step, seed=args.seed, accum=accum, micro=micro)
+        if N == 1:
+            return make_batch(cfg, shape, step, seed=args.seed, accum=accum, micro=micro)
+        # fused chunk: stack the next N deterministic batches along the scan axis
+        bs = [
+            make_batch(cfg, shape, step * N + i, seed=args.seed, accum=accum, micro=micro)
+            for i in range(N)
+        ]
+        return jax.tree.map(lambda *xs: np.stack(xs), *bs)
 
     def step_fn(state, step, batch):
         params, opt_state = state
-        params, opt_state, metrics = jitted(params, opt_state, batch)
+        if N == 1:
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+        else:
+            params, opt_state, ms = jitted_chunk(params, opt_state, batch)
+            metrics = jax.tree.map(lambda v: v[-1], ms)  # the chunk's last step
         return (params, opt_state), metrics
 
     def save_fn(step, state):
@@ -128,10 +191,13 @@ def main():
         return manifest["step"], (p, o)
 
     def on_metrics(step, metrics, dt, stragglers):
-        rec = {"step": step, "loss": float(metrics["loss"]), "lr": float(metrics["lr"]),
-               "grad_norm": float(metrics["grad_norm"]), "sec": round(dt, 4)}
+        # under fusion the supervisor step is a chunk: report the optimizer
+        # step the (last-of-chunk) metrics belong to, and per-step seconds
+        rec = {"step": step * N + (N - 1), "loss": float(metrics["loss"]),
+               "lr": float(metrics["lr"]),
+               "grad_norm": float(metrics["grad_norm"]), "sec": round(dt / N, 4)}
         metrics_log.append(rec)
-        if step % max(1, args.steps // 10) == 0 or step < 3:
+        if step % max(1, (args.steps // N) // 10) == 0 or step < 3:
             print(json.dumps(rec), flush=True)
 
     # online equalizer riding along via the supervisor: uniform wall-time
@@ -140,7 +206,11 @@ def main():
         shape.global_batch,
         dp,
         bucket=1,
-        rebalance_every=args.rebalance_every,
+        # the executor advances once per supervisor step (= N optimizer
+        # steps under fusion): scale the cadence so --rebalance-every keeps
+        # meaning optimizer steps
+        rebalance_every=max(1, args.rebalance_every // N) if args.rebalance_every > 0
+        else args.rebalance_every,
         plan_cache_dir=args.plan_cache,
     )
     sup = TrainSupervisor(
@@ -151,13 +221,14 @@ def main():
         executor=executor,
     )
     t0 = time.time()
-    final_step, (params, opt_state) = sup.run((params, opt_state), start_step, args.steps)
+    final_step, (params, opt_state) = sup.run((params, opt_state), start_step, args.steps // N)
     wall = time.time() - t0
     if ckpt is not None:
         ckpt.save(final_step, (params, opt_state))
         ckpt.wait()
     losses = [m["loss"] for m in metrics_log]
-    print(f"done: steps={final_step} wall={wall:.1f}s loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+    print(f"done: steps={final_step * N} dispatches={final_step} wall={wall:.1f}s "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"restarts={sup.restarts} retries={sup.retries}", flush=True)
     print(f"executor: dp={executor.n_partitions} rounds={executor.round} "
           f"counts={executor.counts.tolist()} "
@@ -167,7 +238,9 @@ def main():
             for m in metrics_log:
                 f.write(json.dumps(m) + "\n")
     assert all(np.isfinite(l) for l in losses), "non-finite loss"
-    if args.steps >= 20:  # short runs are too noisy for a hard progress gate
+    # short runs are too noisy for a hard progress gate; under fusion the
+    # log holds one record per CHUNK, so also require >=2 samples
+    if args.steps >= 20 and len(losses) >= 2:
         assert min(losses[-5:]) < losses[0], "loss did not decrease"
 
 

@@ -8,11 +8,13 @@ from repro.runtime.executor import (
 )
 from repro.runtime.cluster import NodeProfile, SimulatedCluster, format_cluster_plan, stampede_profile
 from repro.runtime.fault_tolerance import FailureInjector, StepTimer, TrainSupervisor
+from repro.runtime.pipeline import FusedStepPipeline
 from repro.runtime.schedule import StepSchedule
 
 __all__ = [
     "BlockedDGEngine",
     "CalibrationReport",
+    "FusedStepPipeline",
     "StepSchedule",
     "NestedPartitionExecutor",
     "Plan",

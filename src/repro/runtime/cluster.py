@@ -177,10 +177,9 @@ class SimulatedCluster:
         """Global rhs assembled from per-node engine evaluations — the same
         arithmetic as one BlockedDGEngine, so it matches the flat solver
         bitwise."""
-        import jax.numpy as jnp
-
         K = self.solver.mesh.K
-        out = jnp.zeros((K + 1,) + tuple(q.shape[1:]), q.dtype)
+        # the hoisted (K+1)-row scatter target (engines share one solver)
+        out = self.engines[0].scatter_base(q)
         for i, eng in enumerate(self.engines):
             b = eng._blocks[i]
             if b is None:

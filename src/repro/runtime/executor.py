@@ -659,7 +659,7 @@ class BlockedDGEngine:
         import jax
         import jax.numpy as jnp
 
-        from repro.dg.operators import surface_rhs, volume_rhs
+        from repro.dg.operators import surface_rhs, volume_rhs_impl
 
         s = self.solver
         # one jitted bundle per solver, shared by every engine bound to it —
@@ -668,6 +668,7 @@ class BlockedDGEngine:
         bundle = getattr(s, "_blocked_jit_bundle", None)
         if bundle is None:
             D, metrics, lift = s.D, s.metrics, s.lift
+            impl = s.kernel_impl  # Pallas volume AND flux kernels thread through
 
             def gather(q, idx):
                 return q[idx]
@@ -678,10 +679,12 @@ class BlockedDGEngine:
                 return jnp.concatenate([q[own_idx], q_halo], axis=0)
 
             def interior(q, own_idx, rho, lam, mu):
-                return volume_rhs(q[own_idx], D, metrics, rho, lam, mu)
+                return volume_rhs_impl(q[own_idx], D, metrics, rho, lam, mu,
+                                       kernel_impl=impl)
 
             def boundary(qb, nbr_local, rho, lam, mu, cp, cs):
-                return surface_rhs(qb, nbr_local, lift, rho, lam, mu, cp, cs)
+                return surface_rhs(qb, nbr_local, lift, rho, lam, mu, cp, cs,
+                                   kernel_impl=impl)
 
             def fold(vol, sur):
                 # rows past the block's own count are dump rows (scattered to
@@ -734,6 +737,13 @@ class BlockedDGEngine:
         nbr = s.mesh.neighbors
         bucket = self.executor.bucket
         dt = jnp.dtype(s.dtype)
+        # the (K+1)-row scatter target (row K is the dump row for padded
+        # block rows) is shape-invariant across resplices — hoisted here,
+        # and shared per solver (a SimulatedCluster's N engines reuse one
+        # buffer), so rhs() never allocates a fresh zeros per evaluation
+        if getattr(s, "_scatter_base", None) is None:
+            s._scatter_base = jnp.zeros((K + 1, 9, s.M, s.M, s.M), dt)
+        self._scatter_base = s._scatter_base
         blocks = []
         for p, node in enumerate(part.nodes):
             own = np.asarray(node.elements, dtype=np.int64)
@@ -782,32 +792,74 @@ class BlockedDGEngine:
         """One partition's rhs rows via the four-phase schedule."""
         return self.schedule.rhs((q, b))
 
-    def rhs(self, q):
-        """Full rhs assembled from per-partition block evaluations."""
+    def scatter_base(self, q):
+        """The hoisted (K+1)-row scatter target (falls back to a fresh zeros
+        only when the caller's field dtype/shape differs from the solver's)."""
         import jax.numpy as jnp
 
+        base = self._scatter_base
+        if base.dtype != q.dtype or base.shape[1:] != tuple(q.shape[1:]):
+            K = self.solver.mesh.K
+            base = jnp.zeros((K + 1,) + tuple(q.shape[1:]), q.dtype)
+        return base
+
+    def rhs(self, q):
+        """Full rhs assembled from per-partition block evaluations.
+
+        Composition is phase-major (``StepSchedule.rhs_many``): every halo
+        gather is issued before any interior kernel, so an async backend
+        overlaps all transfers with all interiors — the same issue order the
+        fused pipeline compiles into one program."""
         K = self.solver.mesh.K
-        out = jnp.zeros((K + 1,) + tuple(q.shape[1:]), q.dtype)
-        for b in self._blocks:
-            if b is None:
-                continue
-            out = out.at[b["scat"]].set(self.block_rhs(q, b))
+        blocks = [b for b in self._blocks if b is not None]
+        outs = self.schedule.rhs_many([(q, b) for b in blocks])
+        out = self.scatter_base(q)
+        for b, r in zip(blocks, outs):
+            out = out.at[b["scat"]].set(r)
         return out[:K]
 
-    def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False):
-        """Step driver: LSRK4(5) on the blocked rhs; with ``observe`` the
-        executor gets per-partition timings and rebalances on schedule."""
+    def pipeline(self):
+        """The fused scan-compiled step pipeline bound to this engine
+        (built lazily, invalidated and rebuilt across resplices)."""
+        if getattr(self, "_pipeline", None) is None:
+            from repro.runtime.pipeline import FusedStepPipeline
+
+            self._pipeline = FusedStepPipeline(self)
+        return self._pipeline
+
+    def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False,
+            fused: bool = True):
+        """Step driver: LSRK4(5) on the blocked rhs.
+
+        ``fused`` (default) drives the ``FusedStepPipeline``: the whole time
+        loop — ``lax.scan`` over steps, scan over the five LSRK stages,
+        same-bucket blocks batched into one kernel launch — runs as a single
+        donated device program, so host dispatches drop from
+        O(stages x blocks) to O(1) per run.  With ``observe`` the executor
+        gets per-partition timings (the per-block schedule path, which is
+        what calibration keeps existing for) and rebalances on schedule,
+        stepping through the pipeline one fused step at a time.
+        ``fused=False`` is the eager per-block reference path."""
         import jax.numpy as jnp
 
         from repro.dg.rk import lsrk45_step
 
         dt = dt or self.solver.cfl_dt()
+        if fused and not observe:
+            return self.pipeline().run(q, n_steps, dt=dt)
+        pipe = self.pipeline() if fused else None
+        # detach from the caller's buffer so the donated fused step never
+        # consumes an array the caller still holds
+        q = jnp.copy(q) if fused else q
         res = jnp.zeros_like(q)
         for _ in range(n_steps):
             if observe:
                 self.executor.observe(self.measure_block_times(q))
                 self.executor.advance()
-            q, res = lsrk45_step(q, res, self.rhs, dt)
+            if fused:
+                q, res = pipe.step(q, res, dt)
+            else:
+                q, res = lsrk45_step(q, res, self.rhs, dt)
         return q
 
     # -- measurement --------------------------------------------------------

@@ -1,0 +1,269 @@
+"""Fused, donated, scan-compiled time stepping for the blocked DG engine.
+
+The paper's overlap schedule only pays off once each partition's step is a
+single resident device program (cf. the fused propagate/collide kernels of
+Calore et al. and the per-device kernel specialization of Borrell et al.).
+``BlockedDGEngine`` historically drove LSRK4(5) from Python — 5 stages x P
+blocks x ~6 separate jit calls per RHS evaluation, a fresh ``(K+1, ...)``
+scatter target allocated per call, no buffer donation — so the blocked path
+burned its budget on host dispatch.  ``FusedStepPipeline`` compiles the
+entire blocked time loop into ONE donated program:
+
+* **compiled step loop** — ``lax.fori_loop`` with a *traced* trip count and
+  the ``(q, res)`` low-storage carry donated (``donate_argnums``), so the
+  whole run is one host dispatch, the carry is updated in place, and ONE
+  compiled program per bucket signature serves every horizon;
+* **scan over stages** — the five LSRK4(5) stages are the inner
+  ``lax.scan`` of ``repro.dg.rk.lsrk45_step``, traced once;
+* **bucket batching** — blocks sharing a padded ``(ext, own)`` size are
+  stacked and the block RHS is batched over the stacked element axis, so P
+  same-bucket partitions become ONE volume launch and ONE surface launch
+  instead of P of each.  The element axis is the batch axis the kernels
+  (XLA einsum and the Pallas ``dg_volume_pallas`` / ``dg_flux_pallas``
+  grids alike) already tile over, so stacking into it is both the fastest
+  layout and arithmetically identical per element;
+* **hoisted scatter target** — the ``(K+1, ...)`` dump-row target is built
+  once per resplice (``BlockedDGEngine.rebuild``) and threaded through the
+  program as an operand instead of being allocated per evaluation;
+* **kernel_impl threading** — the engine's ``kernel_impl`` selects the
+  Pallas volume AND flux kernels inside the fused program, exactly as on
+  the flat solver path.
+
+Correctness invariant (tested in ``tests/test_pipeline.py``): the fused
+program is bitwise identical to the unfused four-phase per-block schedule —
+the per-bucket gather ``q[own ++ halo ++ pad]`` reproduces the engine's
+assemble concatenation row for row, the batched kernels perform the same
+per-element arithmetic, and the scatter rows are disjoint across buckets.
+The per-block ``StepSchedule`` path survives solely for calibration
+(``BlockedDGEngine.calibrate`` / ``measure_block_times``), which needs the
+four phases separable to time them.
+
+The pipeline registers itself as a resplice hook: a rebalance invalidates
+the stacked tables, and the next call rebuilds them.  Compiled programs are
+cached on the *bucket signature* — the tuple of ``(pad, pad_own, B)`` per
+bucket — which ``bucket_counts`` keeps stable across rebalances, so a
+resplice that moves work between partitions without changing the padded
+shape set reuses the compiled program with new index tables.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["FusedStepPipeline"]
+
+
+class FusedStepPipeline:
+    """One engine's time loop as a single donated, scan-compiled program."""
+
+    def __init__(self, engine):
+        import jax
+
+        self.engine = engine
+        self.executor = engine.executor
+        self.solver = engine.solver
+        self.kernel_impl = engine.solver.kernel_impl
+        self._jax = jax
+        self._tables: Optional[List[dict]] = None
+        self._sig: Optional[Tuple] = None
+        self._rhs_fns: Dict[Tuple, object] = {}
+        self._step_fns: Dict[Tuple, object] = {}
+        self._run_fns: Dict[Tuple, object] = {}
+        # introspection for benchmarks: host dispatches vs steps advanced
+        self.dispatches = 0
+        self.steps_run = 0
+        self.executor._resplice_hooks.append(self.invalidate)
+
+    # -- tables -------------------------------------------------------------
+
+    def invalidate(self) -> None:
+        """Resplice hook: drop the stacked tables (compiled programs stay
+        cached on the bucket signature and are reused when it recurs)."""
+        self._tables = None
+        self._sig = None
+
+    def _build_tables(self) -> None:
+        """Stack same-bucket blocks: one table set per (pad, pad_own) bucket.
+
+        Per bucket of B blocks the tables are the engine's per-block index /
+        material arrays concatenated along the element axis, with block b's
+        local neighbour ids offset by ``b * pad`` (sentinels -1/-2 kept), so
+        one flat surface evaluation reproduces B block evaluations row for
+        row."""
+        import jax.numpy as jnp
+
+        groups: Dict[Tuple[int, int], List[dict]] = {}
+        for b in self.engine._blocks:
+            if b is None:
+                continue
+            pad = int(b["nbr_local"].shape[0])
+            pad_own = int(b["own_pad"].shape[0])
+            groups.setdefault((pad, pad_own), []).append(b)
+
+        sig = []
+        tables = []
+        for (pad, pad_own), blks in sorted(groups.items()):
+            B = len(blks)
+            nbr = np.concatenate(
+                [
+                    np.where(
+                        np.asarray(blk["nbr_local"]) >= 0,
+                        np.asarray(blk["nbr_local"]) + i * pad,
+                        np.asarray(blk["nbr_local"]),
+                    )
+                    for i, blk in enumerate(blks)
+                ]
+            )
+            cat = lambda key: jnp.concatenate([blk[key] for blk in blks])
+            tables.append(
+                {
+                    # q[own ++ halo ++ pad]: the engine's assemble concat as
+                    # one gather (own is unpadded; halo carries the zero pad)
+                    "ext": jnp.concatenate(
+                        [jnp.concatenate([blk["own"], blk["halo"]]) for blk in blks]
+                    ),
+                    "own_pad": cat("own_pad"),
+                    "scat": cat("scat"),
+                    "nbr": jnp.asarray(nbr),
+                    "rho": cat("rho"),
+                    "lam": cat("lam"),
+                    "mu": cat("mu"),
+                    "cp": cat("cp"),
+                    "cs": cat("cs"),
+                    "rho_o": cat("rho_o"),
+                    "lam_o": cat("lam_o"),
+                    "mu_o": cat("mu_o"),
+                }
+            )
+            sig.append((pad, pad_own, B))
+        self._tables = tables
+        self._sig = tuple(sig)
+
+    def _ensure(self) -> None:
+        if self._tables is None:
+            self._build_tables()
+
+    @property
+    def bucket_signature(self) -> Tuple:
+        """((pad, pad_own, n_blocks), ...) — the compile-cache key."""
+        self._ensure()
+        return self._sig
+
+    # -- program construction ----------------------------------------------
+
+    def _make_rhs(self, sig):
+        """The fused full-field rhs: per bucket one gather + one volume
+        launch + one surface launch + one scatter."""
+        from repro.dg.operators import surface_rhs, volume_rhs_impl
+
+        s = self.solver
+        D, metrics, lift = s.D, s.metrics, s.lift
+        K = s.mesh.K
+        impl = self.kernel_impl
+
+        def rhs(q, tables, base):
+            out = base
+            for (pad, pad_own, B), T in zip(sig, tables):
+                vol = volume_rhs_impl(
+                    q[T["own_pad"]], D, metrics,
+                    T["rho_o"], T["lam_o"], T["mu_o"], kernel_impl=impl,
+                )
+                sur = surface_rhs(
+                    q[T["ext"]], T["nbr"], lift,
+                    T["rho"], T["lam"], T["mu"], T["cp"], T["cs"],
+                    kernel_impl=impl,
+                )
+                # rows past each block's own count are dump rows; fold the
+                # leading pad_own surface rows of every block into its volume
+                sur_own = sur.reshape((B, pad) + sur.shape[1:])[:, :pad_own]
+                sur_own = sur_own.reshape((B * pad_own,) + sur.shape[1:])
+                out = out.at[T["scat"]].set(vol + sur_own)
+            return out[:K]
+
+        return rhs
+
+    def _rhs_fn(self, sig):
+        import jax
+
+        fn = self._rhs_fns.get(sig)
+        if fn is None:
+            fn = jax.jit(self._make_rhs(sig))
+            self._rhs_fns[sig] = fn
+        return fn
+
+    def _step_fn(self, sig):
+        import jax
+
+        fn = self._step_fns.get(sig)
+        if fn is None:
+            from repro.dg.rk import lsrk45_step
+
+            rhs = self._make_rhs(sig)
+
+            def step(q, res, dt, tables, base):
+                return lsrk45_step(q, res, lambda x: rhs(x, tables, base), dt)
+
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            self._step_fns[sig] = fn
+        return fn
+
+    def _run_fn(self, sig):
+        import jax
+
+        fn = self._run_fns.get(sig)
+        if fn is None:
+            from repro.dg.rk import lsrk45_step
+
+            rhs = self._make_rhs(sig)
+
+            def run(q, res, dt, n, tables, base):
+                # fori_loop with a TRACED trip count: one compiled program
+                # per bucket signature serves every horizon (a per-n cache
+                # would recompile and retain a program per distinct n)
+                def body(_, carry):
+                    q, res = carry
+                    return lsrk45_step(q, res, lambda x: rhs(x, tables, base), dt)
+
+                q, res = jax.lax.fori_loop(0, n, body, (q, res))
+                return q, res
+
+            fn = jax.jit(run, donate_argnums=(0, 1))
+            self._run_fns[sig] = fn
+        return fn
+
+    # -- execution ----------------------------------------------------------
+
+    def rhs(self, q):
+        """One fused full-field rhs evaluation (the unfused-equality probe)."""
+        self._ensure()
+        self.dispatches += 1
+        return self._rhs_fn(self._sig)(q, self._tables, self.engine.scatter_base(q))
+
+    def step(self, q, res, dt):
+        """One fused LSRK4(5) step; (q, res) are DONATED — callers must pass
+        buffers they own (``run`` handles the copy)."""
+        self._ensure()
+        self.dispatches += 1
+        self.steps_run += 1
+        return self._step_fn(self._sig)(
+            q, res, dt, self._tables, self.engine.scatter_base(q)
+        )
+
+    def run(self, q, n_steps: int, dt: Optional[float] = None, res=None):
+        """Advance ``n_steps`` as ONE host dispatch (step loop with a traced
+        trip count, scan over stages, donated carry).  The caller's ``q`` is
+        copied once so donation never consumes a buffer the caller still
+        holds."""
+        import jax.numpy as jnp
+
+        dt = dt if dt is not None else self.solver.cfl_dt()
+        self._ensure()
+        q = jnp.copy(q)
+        res = jnp.zeros_like(q) if res is None else jnp.copy(res)
+        fn = self._run_fn(self._sig)
+        self.dispatches += 1
+        self.steps_run += int(n_steps)
+        q, _ = fn(q, res, dt, int(n_steps), self._tables, self.engine.scatter_base(q))
+        return q

@@ -72,6 +72,27 @@ class StepSchedule:
         part = self.interior(state)
         return self.correction(part, recv, state)
 
+    def rhs_many(self, states):
+        """Phase-major composition over many independent per-block states:
+        every boundary pack and exchange is issued before any interior
+        compute, so an async backend can overlap ALL of a step's transfers
+        with ALL of its interior work instead of only block-local pairs.
+
+        The blocks are independent (their phases never read each other's
+        results), so the returned list is element-wise identical to mapping
+        :meth:`rhs` over ``states`` — only the issue order changes.  This is
+        the dispatch order the fused pipeline (``runtime.pipeline``) bakes
+        into its single compiled program; here it is available to the
+        eager per-block engine as well.
+        """
+        sends = [self.boundary(st) for st in states]
+        recvs = [self.exchange(send, st) for send, st in zip(sends, states)]
+        parts = [self.interior(st) for st in states]
+        return [
+            self.correction(part, recv, st)
+            for part, recv, st in zip(parts, recvs, states)
+        ]
+
 
 def _zeros_like(a: np.ndarray) -> np.ndarray:
     return np.zeros_like(np.asarray(a, dtype=np.float64))

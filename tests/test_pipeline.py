@@ -1,0 +1,252 @@
+"""Fused scan-compiled pipeline vs the unfused four-phase schedule.
+
+The acceptance invariant: ``FusedStepPipeline`` — one donated program,
+``lax.scan`` over steps and stages, same-bucket blocks batched into single
+kernel launches — is BITWISE identical to the per-block schedule path, on
+periodic meshes, across bucket sizes, before and after an executor
+resplice, and with the Pallas kernels (``kernel_impl='interpret'``) inside
+the fused program.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.dg.mesh import make_brick
+from repro.dg.rk import LSRK_A, LSRK_B, lsrk45_step, lsrk_coeffs
+from repro.dg.solver import DGSolver, gaussian_pulse, make_two_tree_solver
+from repro.runtime.executor import BlockedDGEngine, NestedPartitionExecutor
+
+
+def _periodic_solver(grid=(4, 4, 2), kernel_impl="xla", order=2):
+    mesh = make_brick(grid, (1.0, 1.0, 0.5), periodic=True)
+    K = mesh.K
+    return DGSolver(mesh=mesh, order=order, rho=np.ones(K), lam=np.ones(K),
+                    mu=np.zeros(K), kernel_impl=kernel_impl)
+
+
+def _rand_state(solver, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((solver.mesh.K, 9, solver.M, solver.M, solver.M))
+    )
+
+
+def _unfused_run(eng, q, n_steps, dt):
+    """The unfused schedule, compiled per step: jit traces the scan stage
+    loop over the per-block rhs — the same per-step program the fused
+    pipeline's step loop iterates, so fused vs unfused is bitwise."""
+    import jax
+
+    step = jax.jit(lambda q, res: lsrk45_step(q, res, eng.rhs, dt))
+    res = jnp.zeros_like(q)
+    for _ in range(n_steps):
+        q, res = step(q, res)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# rk: the scan-compiled stage loop
+# ---------------------------------------------------------------------------
+
+
+def test_lsrk_eager_is_exact_reference_loop():
+    """Called eagerly (concrete arrays), lsrk45_step runs the historical
+    Python stage loop — bitwise identical, no per-call re-trace."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((7, 9, 3, 3, 3)))
+    res = jnp.asarray(rng.standard_normal((7, 9, 3, 3, 3)))
+    rhs = lambda x: x * 1.25 - 0.5
+    dt = 1e-3
+    q_ref, res_ref = q, res
+    for s in range(5):
+        res_ref = LSRK_A[s] * res_ref + dt * rhs(q_ref)
+        q_ref = q_ref + LSRK_B[s] * res_ref
+    q_s, res_s = lsrk45_step(q, res, rhs, dt)
+    assert (np.asarray(q_s) == np.asarray(q_ref)).all()
+    assert (np.asarray(res_s) == np.asarray(res_ref)).all()
+
+
+def test_lsrk_scan_under_jit_matches_loop():
+    """Under a trace the stage loop is a lax.scan; it equals the eager loop
+    up to FMA contraction (the compiled body may fuse a*res + dt*rhs into a
+    single-rounding fma; ~1 ulp on O(1) fields)."""
+    import jax
+
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((7, 9, 3, 3, 3)))
+    res = jnp.asarray(rng.standard_normal((7, 9, 3, 3, 3)))
+    rhs = lambda x: x * 1.25 - 0.5
+    dt = 1e-3
+    q_ref, res_ref = lsrk45_step(q, res, rhs, dt)  # eager = reference loop
+    q_s, res_s = jax.jit(lambda q, res: lsrk45_step(q, res, rhs, dt))(q, res)
+    np.testing.assert_allclose(np.asarray(q_s), np.asarray(q_ref), rtol=1e-13, atol=1e-15)
+    np.testing.assert_allclose(np.asarray(res_s), np.asarray(res_ref), rtol=1e-13, atol=1e-15)
+
+
+def test_lsrk_coeffs_dtype_stable():
+    for dt in ("float32", "float64"):
+        c = lsrk_coeffs(dt)
+        assert c.shape == (5, 2) and str(c.dtype) == dt
+    q32 = jnp.zeros((2, 9, 3, 3, 3), jnp.float32)
+    q, res = lsrk45_step(q32, jnp.zeros_like(q32), lambda x: x + 1, 1e-3)
+    assert q.dtype == jnp.float32 and res.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# fused == unfused, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bucket", [4, 8])
+def test_fused_rhs_bitwise_on_periodic_mesh(bucket):
+    """Fused rhs == unfused schedule == flat solver, on a periodic brick,
+    for two bucket (padded-shape) sizes."""
+    solver = _periodic_solver()
+    K = solver.mesh.K
+    q0 = _rand_state(solver)
+    ex = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid, bucket=bucket)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    r_flat = np.asarray(solver.rhs(q0))
+    r_unfused = np.asarray(eng.rhs(q0))
+    r_fused = np.asarray(pipe.rhs(q0))
+    assert (r_unfused == r_flat).all()
+    assert (r_fused == r_unfused).all(), np.abs(r_fused - r_unfused).max()
+
+
+@pytest.mark.parametrize("bucket", [4, 8])
+def test_fused_run_bitwise_before_and_after_resplice(bucket):
+    """The scan-compiled donated run matches the unfused step loop bitwise,
+    then still does after the executor re-splices the block split."""
+    solver = _periodic_solver()
+    K = solver.mesh.K
+    q0 = _rand_state(solver)
+    dt = solver.cfl_dt()
+    ex = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid, bucket=bucket)
+    eng = BlockedDGEngine(solver, ex)
+
+    q_fused = np.asarray(eng.run(q0, 3, dt=dt))
+    q_unfused = np.asarray(_unfused_run(eng, q0, 3, dt))
+    assert (q_fused == q_unfused).all(), np.abs(q_fused - q_unfused).max()
+
+    # resplice: move work between partitions, then compare again
+    ex.observe(np.array([0.02, 0.01, 0.01]))
+    ex.rebalance()
+    assert eng.pipeline().invalidate in ex._resplice_hooks  # hook wired
+    q_fused2 = np.asarray(eng.run(q0, 3, dt=dt))
+    q_unfused2 = np.asarray(_unfused_run(eng, q0, 3, dt))
+    assert (q_fused2 == q_unfused2).all()
+    # the resplice genuinely moved the split AND the pipeline saw it
+    assert not np.array_equal(ex.counts, np.full(3, K // 3))
+
+
+def test_fused_pipeline_with_pallas_kernels_interpret():
+    """kernel_impl='interpret' threads BOTH Pallas kernels (volume + flux)
+    through the fused program; fused == unfused bitwise."""
+    solver = _periodic_solver(kernel_impl="interpret")
+    K = solver.mesh.K
+    q0 = _rand_state(solver)
+    ex = NestedPartitionExecutor(K, 2, grid_dims=solver.mesh.grid, bucket=8)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    r_unfused = np.asarray(eng.rhs(q0))
+    r_fused = np.asarray(pipe.rhs(q0))
+    assert (r_fused == r_unfused).all(), np.abs(r_fused - r_unfused).max()
+    dt = solver.cfl_dt()
+    q_fused = np.asarray(eng.run(q0, 2, dt=dt))
+    q_unfused = np.asarray(_unfused_run(eng, q0, 2, dt))
+    assert (q_fused == q_unfused).all()
+
+
+def test_fused_run_is_one_dispatch_and_preserves_inputs():
+    """run() advances n steps in ONE host dispatch, with the caller's buffer
+    left intact despite the donated carry."""
+    solver = make_two_tree_solver(grid=(6, 4, 4), order=2, extent=(2.0, 1.0, 1.0))
+    q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5))
+    ex = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    d0, s0 = pipe.dispatches, pipe.steps_run
+    q1 = eng.run(q0, 5)
+    assert pipe.dispatches == d0 + 1  # 5 steps, one dispatch
+    assert pipe.steps_run == s0 + 5
+    # q0 not consumed by donation
+    assert np.isfinite(np.asarray(q0)).all()
+    assert q1.shape == q0.shape
+
+
+def test_fused_pipeline_batches_same_bucket_blocks():
+    """Same-padded-size partitions land in ONE bucket (one launch), and the
+    compiled program is reused when a resplice keeps the signature."""
+    solver = _periodic_solver(grid=(4, 4, 4))
+    K = solver.mesh.K  # 64 -> 4 partitions of 16, bucket 16: one bucket of 4
+    ex = NestedPartitionExecutor(K, 4, grid_dims=solver.mesh.grid, bucket=16)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    sig = pipe.bucket_signature
+    assert sum(B for (_, _, B) in sig) == 4
+    assert len(sig) < 4  # strictly fewer launches than blocks
+    # a no-op resplice keeps the signature -> compiled run fn is reused
+    n_fns = len(pipe._run_fns)
+    q0 = _rand_state(solver)
+    eng.run(q0, 2)
+    assert len(pipe._run_fns) == n_fns + 1
+    ex.set_accel_counts(None)  # forces a resplice with identical counts
+    eng.run(q0, 2)
+    assert pipe.bucket_signature == sig
+    assert len(pipe._run_fns) == n_fns + 1  # no recompilation
+
+
+def test_fused_observe_path_feeds_executor():
+    """run(observe=True) steps the fused pipeline while the per-block
+    schedule path (kept for calibration) feeds per-partition timings."""
+    solver = make_two_tree_solver(grid=(6, 4, 4), order=2, extent=(2.0, 1.0, 1.0))
+    q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5))
+    ex = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8,
+                                 rebalance_every=2, smoothing=1.0)
+    eng = BlockedDGEngine(solver, ex)
+    q1 = eng.run(q0, 4, observe=True)
+    assert ex._n_obs >= 4 and ex.round >= 1
+    assert np.isfinite(np.asarray(q1)).all()
+
+
+def test_scatter_base_hoisted_across_calls():
+    """The (K+1,...) scatter target is built once per resplice, not per rhs
+    evaluation."""
+    solver = make_two_tree_solver(grid=(4, 2, 2), order=2)
+    ex = NestedPartitionExecutor(16, 2, grid_dims=(4, 2, 2), bucket=4)
+    eng = BlockedDGEngine(solver, ex)
+    q0 = gaussian_pulse(solver, center=(1.0, 0.5, 0.5))
+    base1 = eng.scatter_base(q0)
+    eng.rhs(q0)
+    base2 = eng.scatter_base(q0)
+    assert base1 is base2
+    assert base1.shape == (17, 9, 3, 3, 3)
+
+
+# ---------------------------------------------------------------------------
+# the flux kernel reached from the solver (satellite: dg_flux wiring)
+# ---------------------------------------------------------------------------
+
+
+def test_flux_kernel_reachable_from_solver():
+    """kernel_impl='interpret' routes surface_rhs through dg_flux_pallas;
+    the solver rhs stays allclose to the jnp reference path."""
+    s_x = make_two_tree_solver(grid=(4, 2, 2), order=3)
+    s_i = make_two_tree_solver(grid=(4, 2, 2), order=3, kernel_impl="interpret")
+    q = gaussian_pulse(s_x, center=(1.0, 0.5, 0.5))
+    np.testing.assert_allclose(s_x.rhs(q), s_i.rhs(q), rtol=1e-10, atol=1e-12)
+
+
+def test_surface_rhs_interpret_matches_xla_on_periodic():
+    from repro.dg.operators import surface_rhs
+
+    solver = _periodic_solver(order=2)
+    q = _rand_state(solver, seed=5)
+    a = surface_rhs(q, solver.neighbors, solver.lift, solver.rho_j, solver.lam_j,
+                    solver.mu_j, solver.cp_j, solver.cs_j)
+    b = surface_rhs(q, solver.neighbors, solver.lift, solver.rho_j, solver.lam_j,
+                    solver.mu_j, solver.cp_j, solver.cs_j, kernel_impl="interpret")
+    np.testing.assert_allclose(a, b, rtol=1e-10, atol=1e-12)
