@@ -10,10 +10,17 @@ drivers on the same engine and split:
   as ONE donated program (``lax.scan`` over steps, scan over stages,
   same-bucket blocks batched into one launch per bucket).
 
+With ``--devices N`` (and N visible devices) a third row measures the
+**sharded** fused driver — ``runtime.pipeline.ShardedStepPipeline``, the
+SPMD slab path's whole time loop as ONE donated ``shard_map`` program with
+the ring ``ppermute`` halo exchange inside the compiled step loop.
+
 Emits the usual CSV rows plus ``BENCH_pipeline.json`` (uploaded as a CI
 artifact) so the fused-vs-unfused throughput ratio is tracked over time.
 
   PYTHONPATH=src python -m benchmarks.run --suite pipeline --smoke
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m benchmarks.run --suite pipeline --smoke --devices 4
 """
 
 from __future__ import annotations
@@ -54,7 +61,49 @@ def _unfused_run(eng, q, n_steps, dt):
     return q
 
 
-def run(grid=(8, 8, 4), order=4, partitions=4, bucket=16, n_steps=20, smoke=False):
+def _sharded_row(result, order, n_steps, devices, reps):
+    """The multi-device row: the SPMD slab path's ShardedStepPipeline — one
+    donated shard_map program (ring ppermute exchange inside the compiled
+    step loop) across ``devices`` devices.  Requires the process to see that
+    many devices (CI sets XLA_FLAGS=--xla_force_host_platform_device_count);
+    emits a skip row otherwise."""
+    from repro.dg.partitioned import PartitionedDG
+    from repro.jax_compat import make_mesh
+
+    n_avail = len(jax.devices())
+    if n_avail < devices:
+        emit(f"pipeline/fused_sharded_{devices}dev", 0.0,
+             f"SKIPPED: {n_avail} device(s) visible, need {devices} "
+             "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+        result["sharded"] = {"devices": devices, "skipped": True,
+                             "devices_visible": n_avail}
+        return
+    # nx must divide by the slab count; keep the element count close to the
+    # single-arena rows so steps/sec stays comparable
+    grid = (2 * devices, 4, 4)
+    solver = make_two_tree_solver(grid=grid, order=order,
+                                  extent=(2.0, 1.0, 1.0), dtype="float32")
+    q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5)).astype(jnp.float32)
+    mesh = make_mesh((devices,), ("data",))
+    pdg = PartitionedDG(solver=solver, mesh_axes=mesh)
+    pipe = pdg.pipeline()
+    dt = solver.cfl_dt()
+    qp = pdg.permute_in(q0)
+    t = timeit(lambda: jax.block_until_ready(pipe.run(qp, n_steps, dt=dt)),
+               reps=reps, warmup=1)
+    sps = n_steps / t
+    emit(f"pipeline/fused_sharded_{devices}dev", t / n_steps * 1e6,
+         f"{sps:.1f} steps/s; {1.0 / n_steps:.2f} dispatches/step; "
+         f"K={solver.mesh.K}")
+    result["sharded"] = {
+        "devices": devices, "grid": list(grid), "K": solver.mesh.K,
+        "steps_per_sec": sps, "dispatches_per_step": 1.0 / n_steps,
+        "host_dispatches_per_run": 1,
+    }
+
+
+def run(grid=(8, 8, 4), order=4, partitions=4, bucket=16, n_steps=20, smoke=False,
+        devices=1):
     if smoke:
         grid, order, partitions, bucket, n_steps = (6, 4, 4), 2, 3, 8, 10
     reps = 1 if smoke else 3
@@ -97,6 +146,8 @@ def run(grid=(8, 8, 4), order=4, partitions=4, bucket=16, n_steps=20, smoke=Fals
         "dispatch_model": "unfused: 5 stages x (6 calls x P blocks + alloc + "
                           "slice + 4 stage ops); fused: 1 dispatch / run",
     }
+    if devices > 1:
+        _sharded_row(result, order, n_steps, devices, reps)
     with open(JSON_PATH, "w") as f:
         json.dump(result, f, indent=2)
 

@@ -42,6 +42,10 @@ def main() -> None:
     ap.add_argument("--overlap", choices=["on", "off", "both"], default="both",
                     help="fig5_3: modeled makespan with the boundary/interior "
                          "overlap schedule on/off (delta row when 'both')")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="pipeline: add a sharded-fused row over this many "
+                         "devices (needs XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N on CPU)")
     args = ap.parse_args()
 
     requested = list(args.suites) + list(args.suite)
@@ -54,6 +58,8 @@ def main() -> None:
         kwargs = {"smoke": args.smoke}
         if name == "fig5_3":
             kwargs["overlap"] = args.overlap
+        if name == "pipeline":
+            kwargs["devices"] = args.devices
         suites[name](**kwargs)
 
 

@@ -1,41 +1,60 @@
 """Nested-partition execution of the DG solver (paper section 5).
 
 Level 1 — inter-node: elements are split into contiguous x-slabs, one per
-device along the ``data`` mesh axis (Morton-ordered within the slab); the
-once-per-stage face exchange between slabs is a ring ``ppermute``
-(`halo_exchange_1d`).
+device along the ``data`` mesh axis; the once-per-stage face exchange
+between slabs is a ring ``lax.ppermute`` (`halo_exchange_1d`) of the
+slab-edge *element layers*.
 
 Level 2 — intra-node boundary/interior: the rhs is a
-``repro.runtime.schedule.StepSchedule`` instantiation — slab-edge faces are
-packed and launched into the ring (boundary + exchange phases), the volume
-kernel + intra-slab fluxes run with no halo dependence (interior phase),
-and the received halo folds in last (correction phase).  XLA's scheduler
+``repro.runtime.schedule.StepSchedule`` instantiation — the slab-edge
+layers are packed and launched into the ring (boundary + exchange phases),
+the volume kernel runs on the slab's own elements with no halo dependence
+(interior phase), and the received layers are appended to the slab and the
+full surface flux folds in last (correction phase).  XLA's scheduler
 overlaps the ppermute DMA with the interior compute — the paper's Fig 5.1
 expressed as dataflow.
 
-Correctness invariant (tested): the partitioned rhs/run equals the flat
-single-array solver bitwise up to float reassociation — the partition is a
-reordering, never an approximation.
+The exchanged payload is the whole edge element layer ``q[:L]`` / ``q[-L:]``
+(not just the extracted face traces): the receiving slab then evaluates
+``surface_rhs`` on the *extended* block ``q[own ++ halo_lo ++ halo_hi]``
+with a neighbour table that resolves cross-slab faces into the halo rows —
+exactly the assemble-then-flux structure of
+``repro.runtime.executor.BlockedDGEngine``, with the halo gather replaced
+by a device-resident collective.  Two deliberate costs versus the old
+face-trace payload schedule: ~M/2x more wire bytes per exchange, and the
+surface flux (intra-slab faces included) now executes entirely in the
+correction phase, so only the volume kernel overlaps the ring DMA — the
+same interior=volume / correction=flux phase split ``BlockedDGEngine``
+uses, which is also how ``CalibrationReport`` already attributes phase
+times for the planner (``boundary_s`` is "face-flux work wherever it
+executes").  What that buys is the acceptance invariant:
 
-The heterogeneous (CPU+MIC) level-2 split with calibrated asymmetric sizes
-is exercised by `repro.core.load_balance` + `benchmarks/table6_1_speedup.py`
-on the cost models; this module is the homogeneous-SPMD incarnation.
+Correctness invariant (tested in ``tests/test_multidevice.py``): the
+partitioned rhs/run equals the flat single-array solver BITWISE — every own
+element's six face corrections are computed by the same ``surface_rhs``
+arithmetic from the same neighbour values (halo rows carry the exact rows
+of the remote elements), so the partition is a reordering, never an
+approximation.  Periodic bricks wrap through the same ring (``wrap=True``
+ppermute for the x direction; y/z wraps stay intra-slab).
+
+Fused multi-device driver: ``run`` (default ``fused=True``) adopts
+``repro.runtime.pipeline.ShardedStepPipeline`` — the whole time loop as ONE
+donated ``shard_map`` program spanning all devices, with the ring exchange
+inside the compiled step loop.  The per-step jitted driver survives as
+``fused=False`` solely for calibration/reference (mirroring how
+``BlockedDGEngine`` kept the four-phase path).
 
 Online rebalancing: ``run(..., executor=...)`` adopts the step-driver API of
-``repro.runtime.executor.NestedPartitionExecutor`` — measured step times
-feed the paper's equalizer and the executor re-solves the nested split on
-schedule (``make_executor`` builds one matching this decomposition).  On the
-SPMD slab path the shard shapes are fixed, so the re-splice lands in the
-executor's ``NestedPartition`` index arrays (level-2 host/accel masks and
-the solved per-node counts); ``repro.runtime.executor.BlockedDGEngine`` is
-the asymmetric-execution incarnation of the same plan.
+``repro.runtime.executor.NestedPartitionExecutor`` — each fused chunk's wall
+time is observed (synchronous-step attribution) and the executor re-solves
+the nested split on schedule (``make_executor`` builds one matching this
+decomposition).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -45,72 +64,93 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.overlap import halo_exchange_1d
 from repro.dg.mesh import BrickMesh  # noqa: F401 — referenced in docs
-from repro.dg.operators import (
-    extract_face,
-    riemann_correction,
-    stress,
-    surface_rhs,
-    volume_rhs_impl,
-)
+from repro.dg.operators import surface_rhs, volume_rhs_impl
 from repro.dg.rk import lsrk45_step
 from repro.dg.solver import DGSolver
 from repro.runtime.schedule import StepSchedule
 
-_MATS = ("rho", "cp", "cs", "mu")
 
-
-def pack_face_payload(S_slab, v_slab, mats: dict):
-    """One slab edge -> (ring payload, own face traces).
-
-    ``S_slab``/``v_slab`` are the stress/velocity fields of the edge layer
-    with the face already extracted; the payload rows carry the face data
-    plus the material line the neighbour needs for the Riemann solve.
-    """
-    L = S_slab.shape[0]
-    mat = jnp.stack([mats[k] for k in _MATS])
-    return jnp.concatenate([S_slab.reshape(L, -1), v_slab.reshape(L, -1), mat.T], axis=1)
-
-
-def unpack_face_payload(buf, L: int, M: int):
-    """Inverse of :func:`pack_face_payload`: (S_face, v_face, materials)."""
-    nface = 6 * M * M
-    Sf = buf[:, :nface].reshape(L, 6, M, M)
-    vf = buf[:, nface : nface + 3 * M * M].reshape(L, 3, M, M)
-    mat = buf[:, nface + 3 * M * M :]
-    return Sf, vf, {k: mat[:, i] for i, k in enumerate(_MATS)}
-
-
-def slab_neighbors(grid, n_slabs: int) -> Tuple[np.ndarray, np.ndarray]:
-    """(order, neighbors_local): elements reordered x-major so each slab is
-    contiguous; intra-slab neighbor ids are slab-local; faces crossing slab
-    boundaries point at the element ITSELF (-> zero jump -> zero intra
-    correction; the halo pass adds the real correction)."""
+def slab_order(grid) -> Tuple[np.ndarray, np.ndarray]:
+    """(order, inv): elements reordered x-major so each x-slab is contiguous
+    and each x-layer within a slab is contiguous (rows of a layer sorted by
+    (iy, iz) — the ordering both ends of the ring agree on)."""
     nx, ny, nz = grid
-    if nx % n_slabs:
-        raise ValueError(f"nx={nx} not divisible by {n_slabs} slabs")
-    from repro.core.partition import face_neighbors
-
     K = nx * ny * nz
-    nbr = face_neighbors(grid)
-    # x-major order: elements sorted by (ix, iy, iz); id = ix + nx*(iy+ny*iz)
     ix = np.arange(K) % nx
     iy = (np.arange(K) // nx) % ny
     iz = np.arange(K) // (nx * ny)
     order = np.lexsort((iz, iy, ix))  # primary key ix
     inv = np.empty(K, np.int64)
     inv[order] = np.arange(K)
-    per = nx // n_slabs * ny * nz
-    nbr_new = np.full((K, 6), -1, np.int64)
-    for f in range(6):
-        src = nbr[order, f]
-        valid = src >= 0
-        mapped = np.where(valid, inv[np.clip(src, 0, None)], -1)
-        # faces that cross a slab boundary: -2 (the halo pass adds them)
-        same_slab = (mapped // per) == (np.arange(K) // per)
-        nbr_new[:, f] = np.where(valid & same_slab, mapped, np.where(valid, -2, -1))
-    # local ids within slab (sentinels -1 physical, -2 cross-slab preserved)
-    nbr_local = np.where(nbr_new >= 0, nbr_new % per, nbr_new)
-    return order, nbr_local
+    return order, inv
+
+
+def build_slab_tables(neighbors: np.ndarray, grid, n_slabs: int):
+    """Per-slab extended-block tables for the ring halo exchange.
+
+    Each slab's extended block is ``[own (per) ++ halo_lo (L) ++ halo_hi
+    (L)]`` where ``halo_lo``/``halo_hi`` are the previous slab's last x-layer
+    and the next slab's first x-layer (what `halo_exchange_1d` delivers).
+    Returns ``(order, inv, nbr_ext, ext_ids, x_wrap)``:
+
+    * ``nbr_ext`` (P, per+2L, 6): slab-local neighbour table over the
+      extended block — own rows resolve every face to an own or halo row
+      (or -1 physical mirror); halo rows are -1 (their flux output is
+      discarded);
+    * ``ext_ids`` (P, per+2L): permuted element ids backing each extended
+      row (for gathering the static material lines);
+    * ``x_wrap``: whether the x direction wraps (periodic brick) — the ring
+      ppermute then wraps too.
+
+    ``neighbors`` is the SOLVER mesh's table, so periodic bricks keep their
+    wrapping faces: x-wraps ride the ring, y/z wraps stay intra-slab.
+    """
+    nx, ny, nz = grid
+    if nx % n_slabs:
+        raise ValueError(f"nx={nx} not divisible by {n_slabs} slabs")
+    K = nx * ny * nz
+    per = K // n_slabs
+    L = ny * nz
+    order, inv = slab_order(grid)
+    nbr = np.asarray(neighbors, dtype=np.int64)
+    # permuted table: new id -> new ids of its 6 face neighbours (-1 kept)
+    nbr_p = np.where(nbr[order] >= 0, inv[np.clip(nbr[order], 0, None)], -1)
+    # the ring wraps iff the mesh is x-periodic (an ix=0 element — order[0]
+    # is one — has a -x neighbour) AND that wrap actually crosses slabs
+    x_wrap = bool(nbr_p[0, 0] >= 0) and n_slabs > 1
+
+    ext_n = per + 2 * L
+    nbr_ext = np.full((n_slabs, ext_n, 6), -1, np.int64)
+    ext_ids = np.zeros((n_slabs, ext_n), np.int64)
+    for d in range(n_slabs):
+        own = np.arange(d * per, (d + 1) * per)
+        # ring payload sources (permuted ids); at a non-wrapping global
+        # boundary the ring delivers zeros and no own face references the
+        # halo rows, so the id is only a dummy for finite material lines
+        prev_hi = np.arange((((d - 1) % n_slabs) + 1) * per - L,
+                            (((d - 1) % n_slabs) + 1) * per)
+        next_lo = np.arange(((d + 1) % n_slabs) * per,
+                            ((d + 1) % n_slabs) * per + L)
+        ext_ids[d] = np.concatenate([own, prev_hi, next_lo])
+
+        nn = nbr_p[own]  # (per, 6) permuted-global neighbour ids
+        same = (nn >= 0) & (nn // per == d)
+        out = np.where(same, nn - d * per, -1)
+        cross = (nn >= 0) & ~same
+        # -x cross faces live in the first layer and land on halo_lo row j
+        # (layers at both ring ends are (iy, iz)-sorted, so offsets line up)
+        if cross[:, 0].any():
+            assert not cross[L:, 0].any(), "cross-slab -x face outside the edge layer"
+            assert (nn[:L, 0][cross[:L, 0]] == prev_hi[cross[:L, 0]]).all()
+            out[:L, 0] = np.where(cross[:L, 0], per + np.arange(L), out[:L, 0])
+        if cross[:, 1].any():
+            assert not cross[:-L, 1].any(), "cross-slab +x face outside the edge layer"
+            assert (nn[-L:, 1][cross[-L:, 1]] == next_lo[cross[-L:, 1]]).all()
+            out[-L:, 1] = np.where(cross[-L:, 1], per + L + np.arange(L), out[-L:, 1])
+        # slabs span the full y/z extent: no other face can cross
+        assert not cross[:, 2:].any(), "cross-slab y/z face (slabs must span y,z)"
+        nbr_ext[d, :per] = out
+    return order, inv, nbr_ext, ext_ids, x_wrap
 
 
 @dataclasses.dataclass
@@ -125,20 +165,29 @@ class PartitionedDG:
         s = self.solver
         self.P = self.mesh_axes.shape[self.axis]
         nx, ny, nz = s.mesh.grid
-        self.order_perm, nbr_local = slab_neighbors(s.mesh.grid, self.P)
         self.K_loc = s.mesh.K // self.P
         self.layer = ny * nz  # elements per x-layer
-        self.nbr_local = jnp.asarray(nbr_local)
-        p = self.order_perm
-        self.rho = jnp.asarray(s.rho[p])
-        self.lam = jnp.asarray(s.lam[p])
-        self.mu = jnp.asarray(s.mu[p])
-        self.cp = jnp.sqrt((self.lam + 2 * self.mu) / self.rho)
-        self.cs = jnp.sqrt(self.mu / self.rho)
-        self.inv_perm = np.empty_like(self.order_perm)
-        self.inv_perm[self.order_perm] = np.arange(len(self.order_perm))
+        self.order_perm, inv, nbr_ext, ext_ids, self.x_wrap = build_slab_tables(
+            s.mesh.neighbors, s.mesh.grid, self.P
+        )
+        self.inv_perm = inv
+        dt = jnp.dtype(s.dtype)
+        # global sharded tables: (P * ext_n, ...) with one slab's extended
+        # block per device (materials are static — only q rides the ring)
+        ids = ext_ids.reshape(-1)
+        self.nbr_e = jnp.asarray(nbr_ext.reshape(-1, 6))
+        rho = np.asarray(s.rho)[self.order_perm][ids]
+        lam = np.asarray(s.lam)[self.order_perm][ids]
+        mu = np.asarray(s.mu)[self.order_perm][ids]
+        self.rho_e = jnp.asarray(rho, dt)
+        self.lam_e = jnp.asarray(lam, dt)
+        self.mu_e = jnp.asarray(mu, dt)
+        self.cp_e = jnp.sqrt((self.lam_e + 2 * self.mu_e) / self.rho_e)
+        self.cs_e = jnp.sqrt(self.mu_e / self.rho_e)
         self.spec_q = P(self.axis, None, None, None, None)
         self.spec_e = P(self.axis)
+        self._pipeline = None
+        self._step_jit = None
 
     # ------------------------------------------------------------------
     def permute_in(self, q_flat: jnp.ndarray) -> jnp.ndarray:
@@ -148,71 +197,66 @@ class PartitionedDG:
         return q_part[self.inv_perm]
 
     # ------------------------------------------------------------------
-    def _apply_halo(self, out, buf, own_faces, st, side: str, idx):
-        """Fold one received slab-edge halo (``lo`` or ``hi``) into ``out``."""
+    def _make_schedule(self) -> StepSchedule:
+        """The slab rhs as the shared four-phase schedule: pack the slab-edge
+        element layers -> ring exchange -> volume on own elements -> extended
+        surface flux fold.  Runs inside ``shard_map`` (eagerly per stage via
+        :meth:`rhs`, or inside the fused compiled loop of
+        ``repro.runtime.pipeline.ShardedStepPipeline``)."""
         s = self.solver
         L = self.layer
-        sl = slice(None, L) if side == "lo" else slice(-L, None)
-        Sm, vm = own_faces
-        Sp, vp, mp = unpack_face_payload(buf, L, s.M)
-        mm = {k: st[k][sl] for k in _MATS}
-        # the global x boundary (first/last device) is already mirrored by
-        # the intra pass (nbr == -1): zero the halo correction there
-        is_global = (idx == 0) if side == "lo" else (idx == self.P - 1)
-        mp = {k: jnp.where(is_global, mm[k], v) for k, v in mp.items()}
-        sign = -1.0 if side == "lo" else +1.0
-        FE, Fv = riemann_correction(Sm, vm, Sp, vp, 0, sign, mm, mp)
-        corr = jnp.concatenate([FE, Fv / st["rho"][sl, None, None, None]], axis=1)
-        corr = jnp.where(is_global, 0.0, corr)
-        node = 0 if side == "lo" else s.M - 1
-        return out.at[sl, :, node, :, :].add(-s.lift[0] * corr)
-
-    def _make_schedule(self, nbr) -> StepSchedule:
-        """The slab rhs as the shared four-phase schedule: pack slab-edge
-        faces -> ring exchange -> volume + intra-slab fluxes -> halo fold."""
-        s = self.solver
-        L = self.layer
+        per = self.K_loc
 
         def boundary(st):
-            # extract both slab-edge faces and pack the ring payloads
-            S = stress(st["q"], st["lam"], st["mu"])
-            lo_S = extract_face(S[:L], 0)  # -x faces of first layer
-            lo_v = extract_face(st["q"][:L, 6:9], 0)
-            hi_S = extract_face(S[-L:], 1)  # +x faces of last layer
-            hi_v = extract_face(st["q"][-L:, 6:9], 1)
-            lo = pack_face_payload(lo_S, lo_v, {k: st[k][:L] for k in _MATS})
-            hi = pack_face_payload(hi_S, hi_v, {k: st[k][-L:] for k in _MATS})
-            return {"send_lo": lo, "send_hi": hi,
-                    "lo_faces": (lo_S, lo_v), "hi_faces": (hi_S, hi_v)}
+            # the pack: both slab-edge element layers (contiguous slices)
+            q = st["q"]
+            return {"lo": q[:L], "hi": q[-L:]}
 
         def exchange(send, st):
             from_prev, from_next = halo_exchange_1d(
-                send["send_lo"], send["send_hi"], self.axis
+                send["lo"], send["hi"], self.axis, wrap=self.x_wrap
             )
-            return dict(send, from_prev=from_prev, from_next=from_next)
+            return {"from_prev": from_prev, "from_next": from_next}
 
         def interior(st):
-            # volume + intra-slab fluxes: no dependence on the ring payload;
-            # kernel_impl threads through so the Pallas volume/flux kernels
-            # run inside the SPMD slab path too
-            out = volume_rhs_impl(st["q"], s.D, s.metrics, st["rho"], st["lam"],
-                                  st["mu"], kernel_impl=s.kernel_impl)
-            return out + surface_rhs(st["q"], nbr, s.lift, st["rho"], st["lam"],
-                                     st["mu"], st["cp"], st["cs"],
-                                     kernel_impl=s.kernel_impl)
+            # volume on own elements: no dependence on the ring payload;
+            # kernel_impl threads through so the Pallas volume kernel runs
+            # inside the SPMD slab path too
+            return volume_rhs_impl(
+                st["q"], s.D, s.metrics,
+                st["rho"][:per], st["lam"][:per], st["mu"][:per],
+                kernel_impl=s.kernel_impl,
+            )
 
         def correction(out, recv, st):
-            idx = jax.lax.axis_index(self.axis)
-            out = self._apply_halo(out, recv["from_prev"], recv["lo_faces"], st, "lo", idx)
-            return self._apply_halo(out, recv["from_next"], recv["hi_faces"], st, "hi", idx)
+            # extended block [own ++ halo_lo ++ halo_hi]: the same assemble-
+            # then-flux structure as BlockedDGEngine, so every own row's six
+            # face corrections are bitwise the flat solver's (halo rows'
+            # output is dropped by the slice)
+            q_ext = jnp.concatenate([st["q"], recv["from_prev"], recv["from_next"]])
+            sur = surface_rhs(
+                q_ext, st["nbr"], s.lift,
+                st["rho"], st["lam"], st["mu"], st["cp"], st["cs"],
+                kernel_impl=s.kernel_impl,
+            )
+            return out + sur[:per]
 
         return StepSchedule(boundary=boundary, exchange=exchange,
                             interior=interior, correction=correction, name="slab-spmd")
 
     def _rhs_local(self, q, nbr, rho, lam, mu, cp, cs):
         """Per-device rhs with ring halo exchange; runs inside shard_map."""
-        state = {"q": q, "rho": rho, "lam": lam, "mu": mu, "cp": cp, "cs": cs}
-        return self._make_schedule(nbr).rhs(state)
+        state = {"q": q, "nbr": nbr, "rho": rho, "lam": lam, "mu": mu,
+                 "cp": cp, "cs": cs}
+        return self._make_schedule().rhs(state)
+
+    def _operands(self):
+        """The static sharded tables every rhs evaluation threads through."""
+        return (self.nbr_e, self.rho_e, self.lam_e, self.mu_e, self.cp_e, self.cs_e)
+
+    def _operand_specs(self):
+        e = self.spec_e
+        return (P(self.axis, None), e, e, e, e, e)
 
     # ------------------------------------------------------------------
     def rhs(self, q_part: jnp.ndarray) -> jnp.ndarray:
@@ -222,12 +266,11 @@ class PartitionedDG:
         f = shard_map(
             self._rhs_local,
             mesh=self.mesh_axes,
-            in_specs=(self.spec_q, P(self.axis, None), self.spec_e, self.spec_e,
-                      self.spec_e, self.spec_e, self.spec_e),
+            in_specs=(self.spec_q,) + self._operand_specs(),
             out_specs=self.spec_q,
             check_vma=False,
         )
-        return f(q_part, self.nbr_local, self.rho, self.lam, self.mu, self.cp, self.cs)
+        return f(q_part, *self._operands())
 
     def make_executor(self, bucket: int = 16, **kwargs):
         """An online auto-rebalancing executor matching this decomposition
@@ -242,42 +285,75 @@ class PartitionedDG:
             **kwargs,
         )
 
+    def pipeline(self):
+        """The fused multi-device step pipeline bound to this decomposition:
+        ONE donated shard_map program — step loop, stage scan, and the ring
+        ppermute exchange all inside (built lazily, cached)."""
+        if self._pipeline is None:
+            from repro.runtime.pipeline import ShardedStepPipeline
+
+            self._pipeline = ShardedStepPipeline(self)
+        return self._pipeline
+
     def run(
         self,
         q_part: jnp.ndarray,
         n_steps: int,
         dt: Optional[float] = None,
         executor=None,
+        fused: bool = True,
     ) -> jnp.ndarray:
-        """Advance ``n_steps``.  With an ``executor`` the run is segmented on
-        its rebalance schedule: each segment's wall time is observed
-        (synchronous-step attribution) and the nested split re-solved — the
-        calibrate->solve->resplice loop running alongside the SPMD compute."""
+        """Advance ``n_steps``.
+
+        ``fused`` (default) drives the ``ShardedStepPipeline``: the whole
+        time loop runs as a single donated device program spanning all
+        devices — one host dispatch per run (per rebalance chunk with an
+        ``executor``), independent of device count, slab count and horizon.
+        ``fused=False`` is the eager per-step reference driver (one jitted
+        step per host dispatch) kept for calibration and differential tests.
+
+        With an ``executor`` the run is segmented on its rebalance schedule:
+        each segment's wall time is observed (synchronous-step attribution)
+        and the nested split re-solved — the calibrate->solve->resplice loop
+        running alongside the SPMD compute."""
         dt = dt or self.solver.cfl_dt()
-        res = jnp.zeros_like(q_part)
 
-        @partial(jax.jit, static_argnums=2)
-        def many(q, res, length):
-            def body(carry, _):
-                q, res = carry
-                q, res = lsrk45_step(q, res, self.rhs, dt)
-                return (q, res), None
-
-            (q, res), _ = jax.lax.scan(body, (q, res), None, length=length)
-            return q, res
-
-        if executor is None:
-            q_part, _ = many(q_part, res, n_steps)
+        if fused:
+            pipe = self.pipeline()
+            if executor is None:
+                return pipe.run(q_part, n_steps, dt=dt)
+            done = 0
+            while done < n_steps:
+                chunk = n_steps - done
+                if executor.rebalance_every > 0:
+                    chunk = min(executor.rebalance_every, chunk)
+                t0 = time.perf_counter()
+                q_part = pipe.run(q_part, chunk, dt=dt)
+                jax.block_until_ready(q_part)
+                executor.observe_total((time.perf_counter() - t0) / chunk)
+                executor.advance(chunk)
+                done += chunk
             return q_part
 
+        # eager reference driver: one jitted step per dispatch (shared
+        # compiled step; dt is a traced operand so it compiles once)
+        if self._step_jit is None:
+            self._step_jit = jax.jit(
+                lambda q, res, dt: lsrk45_step(q, res, self.rhs, dt)
+            )
+        res = jnp.zeros_like(q_part)
+        dt_j = jnp.asarray(dt, q_part.dtype)
         done = 0
         while done < n_steps:
-            chunk = min(executor.rebalance_every, n_steps - done)
+            chunk = n_steps - done
+            if executor is not None and executor.rebalance_every > 0:
+                chunk = min(executor.rebalance_every, chunk)
             t0 = time.perf_counter()
-            q_part, res = many(q_part, res, chunk)
-            jax.block_until_ready(q_part)
-            wall = time.perf_counter() - t0
-            executor.observe_total(wall / chunk)
-            executor.advance(chunk)
+            for _ in range(chunk):
+                q_part, res = self._step_jit(q_part, res, dt_j)
+            if executor is not None:
+                jax.block_until_ready(q_part)
+                executor.observe_total((time.perf_counter() - t0) / chunk)
+                executor.advance(chunk)
             done += chunk
         return q_part

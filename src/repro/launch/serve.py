@@ -55,6 +55,10 @@ def main():
                     help="scan-compile the greedy decode loop into one "
                          "donated dispatch per sub-batch (default on)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the generated (batch, gen) token matrix as "
+                         ".npy — lets the determinism tests diff two runs "
+                         "(and fused vs unfused decode) bitwise")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -192,6 +196,9 @@ def main():
     for p, n, dt in per_part:
         print(f"  partition {p}: rows={n} wall={dt * 1e3:.1f}ms")
     print("sample:", gen[0, :16].tolist())
+    if args.out:
+        np.save(args.out, gen)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -230,6 +230,9 @@ def main():
     print(f"done: steps={final_step * N} dispatches={final_step} wall={wall:.1f}s "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"restarts={sup.restarts} retries={sup.retries}", flush=True)
+    # full-precision final loss on its own line: the determinism tests diff
+    # this (and --metrics-out) bitwise across seeds and fused/unfused drivers
+    print(f"final_loss={losses[-1]!r}", flush=True)
     print(f"executor: dp={executor.n_partitions} rounds={executor.round} "
           f"counts={executor.counts.tolist()} "
           f"predicted_makespan={executor.predicted_makespan():.4f}s", flush=True)

@@ -8,13 +8,15 @@ from repro.runtime.executor import (
 )
 from repro.runtime.cluster import NodeProfile, SimulatedCluster, format_cluster_plan, stampede_profile
 from repro.runtime.fault_tolerance import FailureInjector, StepTimer, TrainSupervisor
-from repro.runtime.pipeline import FusedStepPipeline
-from repro.runtime.schedule import StepSchedule
+from repro.runtime.pipeline import FusedStepPipeline, ShardedStepPipeline
+from repro.runtime.schedule import DispatchStats, StepSchedule
 
 __all__ = [
     "BlockedDGEngine",
     "CalibrationReport",
     "FusedStepPipeline",
+    "ShardedStepPipeline",
+    "DispatchStats",
     "StepSchedule",
     "NestedPartitionExecutor",
     "Plan",

@@ -17,6 +17,15 @@ kernel timings:
   the partition's *exact* cross-node face cuts (``ClusterPartition``):
   ``latency * peers + bytes / bandwidth`` per node per step.
 
+The step driver is fused by default (``run(fused=True)``): every node's
+block executes inside ONE donated scan-compiled ``FusedStepPipeline``
+program per rebalance chunk — same-profile node groups are batched into
+their own launches (``profile_groups``), and the simulated per-node step
+price (compute/speed plus the link model) is accumulated *inside* the
+compiled scan (``FusedStepPipeline.run(price=...)``), so observation no
+longer forces one host dispatch per step.  The eager per-step path
+(``fused=False``) survives for calibration-style per-step measurement.
+
 ``resolve`` re-solves **both** levels from a per-node ``CalibrationReport``:
 level 1 feeds the overlap-aware fleet report into the executor's
 waterfilling solve (new node counts -> resplice), level 2 re-runs the
@@ -131,6 +140,11 @@ class SimulatedCluster:
             BlockedDGEngine(solver, self.executor, only_blocks=[i])
             for i in range(len(self.profiles))
         ]
+        # the fused data plane (built lazily by fused_pipeline()): one full
+        # engine whose FusedStepPipeline batches each same-profile node
+        # group through its own launches inside ONE compiled program
+        self._fused_engine: Optional[BlockedDGEngine] = None
+        self.last_sim_times: Optional[np.ndarray] = None
 
     # -- introspection -------------------------------------------------------
 
@@ -187,14 +201,56 @@ class SimulatedCluster:
             out = out.at[b["scat"]].set(eng.block_rhs(q, b))
         return out[:K]
 
-    def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False):
-        """LSRK4(5) on the cluster rhs; with ``observe`` the executor sees
-        simulated per-node step times and rebalances on its schedule."""
+    def profile_groups(self) -> np.ndarray:
+        """Node -> bucket-group ids: nodes sharing a profile class
+        ``(name, speed)`` share a group, so the fused pipeline batches each
+        same-profile group through its own launches."""
+        keys: dict = {}
+        out = np.zeros(self.n_nodes, dtype=np.int64)
+        for i, p in enumerate(self.profiles):
+            out[i] = keys.setdefault((p.name, p.speed), len(keys))
+        return out
+
+    def fused_pipeline(self):
+        """The cluster's fused step driver: ONE donated scan-compiled
+        program covering every node's block (same-profile node groups
+        batched per group), rebuilt across resplices via the usual hooks."""
+        if self._fused_engine is None:
+            self._fused_engine = BlockedDGEngine(self.solver, self.executor)
+        return self._fused_engine.pipeline(groups=self.profile_groups())
+
+    def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False,
+            fused: bool = True):
+        """LSRK4(5) on the cluster rhs.
+
+        ``fused`` (default) drives the grouped ``FusedStepPipeline``: the
+        whole horizon is one donated device program per rebalance chunk,
+        with the simulated per-node step price (compute/speed + the
+        alpha-beta link on the exact face cuts) accumulated INSIDE the
+        compiled scan; with ``observe`` the accumulated seconds feed the
+        executor per chunk and it rebalances on its schedule.
+        ``fused=False`` is the eager per-step reference path (kept for
+        calibration-style per-step observation)."""
         from repro.dg.rk import lsrk45_step
 
         import jax.numpy as jnp
 
         dt = dt or self.solver.cfl_dt()
+        if fused:
+            done = 0
+            while done < n_steps:
+                chunk = n_steps - done
+                if observe and self.executor.rebalance_every > 0:
+                    chunk = min(self.executor.rebalance_every, chunk)
+                pipe = self.fused_pipeline()  # after a resplice: new tables
+                price = self.step_times()  # deterministic sim: counts + link
+                q, sim = pipe.run(q, chunk, dt=dt, price=price)
+                self.last_sim_times = np.asarray(sim) / chunk
+                if observe:
+                    self.executor.observe(self.last_sim_times)
+                    self.executor.advance(chunk)
+                done += chunk
+            return q
         res = jnp.zeros_like(q)
         for _ in range(n_steps):
             if observe:

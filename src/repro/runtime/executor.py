@@ -818,14 +818,23 @@ class BlockedDGEngine:
             out = out.at[b["scat"]].set(r)
         return out[:K]
 
-    def pipeline(self):
+    def pipeline(self, groups=None):
         """The fused scan-compiled step pipeline bound to this engine
-        (built lazily, invalidated and rebuilt across resplices)."""
-        if getattr(self, "_pipeline", None) is None:
+        (built lazily, invalidated and rebuilt across resplices).
+
+        ``groups`` (optional partition -> bucket-group map) keeps blocks of
+        different groups out of each other's batched launches — how a
+        ``SimulatedCluster`` fuses each same-profile node group separately;
+        one pipeline is cached per distinct grouping."""
+        key = None if groups is None else tuple(int(g) for g in groups)
+        cache = getattr(self, "_pipelines", None)
+        if cache is None:
+            cache = self._pipelines = {}
+        if key not in cache:
             from repro.runtime.pipeline import FusedStepPipeline
 
-            self._pipeline = FusedStepPipeline(self)
-        return self._pipeline
+            cache[key] = FusedStepPipeline(self, groups=groups)
+        return cache[key]
 
     def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False,
             fused: bool = True):

@@ -1,4 +1,4 @@
-"""Fused, donated, scan-compiled time stepping for the blocked DG engine.
+"""Fused, donated, scan-compiled time stepping for the DG step drivers.
 
 The paper's overlap schedule only pays off once each partition's step is a
 single resident device program (cf. the fused propagate/collide kernels of
@@ -15,35 +15,56 @@ entire blocked time loop into ONE donated program:
   compiled program per bucket signature serves every horizon;
 * **scan over stages** — the five LSRK4(5) stages are the inner
   ``lax.scan`` of ``repro.dg.rk.lsrk45_step``, traced once;
-* **bucket batching** — blocks sharing a padded ``(ext, own)`` size are
-  stacked and the block RHS is batched over the stacked element axis, so P
-  same-bucket partitions become ONE volume launch and ONE surface launch
-  instead of P of each.  The element axis is the batch axis the kernels
-  (XLA einsum and the Pallas ``dg_volume_pallas`` / ``dg_flux_pallas``
-  grids alike) already tile over, so stacking into it is both the fastest
-  layout and arithmetically identical per element;
+* **bucket batching** — blocks sharing a padded ``(ext, own)`` size (and
+  profile group, see below) are stacked and the block RHS is batched over
+  the stacked element axis, so P same-bucket partitions become ONE volume
+  launch and ONE surface launch instead of P of each.  The element axis is
+  the batch axis the kernels (XLA einsum and the Pallas
+  ``dg_volume_pallas`` / ``dg_flux_pallas`` grids alike) already tile over,
+  so stacking into it is both the fastest layout and arithmetically
+  identical per element;
 * **hoisted scatter target** — the ``(K+1, ...)`` dump-row target is built
   once per resplice (``BlockedDGEngine.rebuild``) and threaded through the
   program as an operand instead of being allocated per evaluation;
 * **kernel_impl threading** — the engine's ``kernel_impl`` selects the
   Pallas volume AND flux kernels inside the fused program, exactly as on
-  the flat solver path.
+  the flat solver path;
+* **profile groups** — an optional partition -> group map keeps blocks of
+  different (simulated) node classes in separate buckets, so a
+  ``SimulatedCluster`` batches each same-profile node group through its own
+  launches inside the one compiled program;
+* **in-scan pricing** — ``run(..., price=...)`` threads a per-partition
+  per-step cost vector through the step loop's carry, so a simulated
+  cluster's link+compute seconds accumulate inside the compiled scan
+  instead of in host Python.
 
-Correctness invariant (tested in ``tests/test_pipeline.py``): the fused
-program is bitwise identical to the unfused four-phase per-block schedule —
-the per-bucket gather ``q[own ++ halo ++ pad]`` reproduces the engine's
-assemble concatenation row for row, the batched kernels perform the same
-per-element arithmetic, and the scatter rows are disjoint across buckets.
-The per-block ``StepSchedule`` path survives solely for calibration
+``ShardedStepPipeline`` is the multi-device incarnation of the same idea
+for the SPMD slab path (``repro.dg.partitioned.PartitionedDG``): the whole
+time loop is ONE donated ``shard_map`` program spanning all devices — the
+ring ``lax.ppermute`` face exchange of the slab ``StepSchedule`` runs
+*inside* the compiled ``fori_loop``/stage-scan, so the halo DMA overlaps
+the interior volume kernel across ranks with zero host involvement.  Host
+dispatches per ``run()`` are O(1) independent of device count, slab count
+and step horizon (asserted by ``tests/test_multidevice.py``).
+
+Correctness invariant (tested in ``tests/test_pipeline.py`` /
+``tests/test_multidevice.py``): both fused programs are bitwise identical
+to their unfused reference paths and to the flat solver — the per-bucket
+gather ``q[own ++ halo ++ pad]`` (or the slab's ``q[own ++ halo_lo ++
+halo_hi]`` extension) reproduces the engine's assemble concatenation row
+for row, the batched kernels perform the same per-element arithmetic, and
+the scatter rows are disjoint across buckets.  The per-block
+``StepSchedule`` path survives solely for calibration
 (``BlockedDGEngine.calibrate`` / ``measure_block_times``), which needs the
 four phases separable to time them.
 
-The pipeline registers itself as a resplice hook: a rebalance invalidates
-the stacked tables, and the next call rebuilds them.  Compiled programs are
-cached on the *bucket signature* — the tuple of ``(pad, pad_own, B)`` per
-bucket — which ``bucket_counts`` keeps stable across rebalances, so a
-resplice that moves work between partitions without changing the padded
-shape set reuses the compiled program with new index tables.
+The blocked pipeline registers itself as a resplice hook: a rebalance
+invalidates the stacked tables, and the next call rebuilds them.  Compiled
+programs are cached on the *bucket signature* — the tuple of
+``(pad, pad_own, B, group)`` per bucket — which ``bucket_counts`` keeps
+stable across rebalances, so a resplice that moves work between partitions
+without changing the padded shape set reuses the compiled program with new
+index tables.
 """
 
 from __future__ import annotations
@@ -52,29 +73,44 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["FusedStepPipeline"]
+from repro.runtime.schedule import DispatchStats
+
+__all__ = ["FusedStepPipeline", "ShardedStepPipeline"]
 
 
 class FusedStepPipeline:
     """One engine's time loop as a single donated, scan-compiled program."""
 
-    def __init__(self, engine):
+    def __init__(self, engine, groups=None):
         import jax
 
         self.engine = engine
         self.executor = engine.executor
         self.solver = engine.solver
         self.kernel_impl = engine.solver.kernel_impl
+        # partition -> bucket group: blocks in different groups are never
+        # stacked into one launch (a SimulatedCluster keeps each profile
+        # class in its own batched launches)
+        self.groups = None if groups is None else np.asarray(groups, dtype=np.int64)
         self._jax = jax
         self._tables: Optional[List[dict]] = None
         self._sig: Optional[Tuple] = None
         self._rhs_fns: Dict[Tuple, object] = {}
         self._step_fns: Dict[Tuple, object] = {}
         self._run_fns: Dict[Tuple, object] = {}
-        # introspection for benchmarks: host dispatches vs steps advanced
-        self.dispatches = 0
-        self.steps_run = 0
+        self._priced_run_fns: Dict[Tuple, object] = {}
+        # introspection for benchmarks and the dispatch-count regression
+        # tests: host dispatches vs steps advanced
+        self.stats = DispatchStats()
         self.executor._resplice_hooks.append(self.invalidate)
+
+    @property
+    def dispatches(self) -> int:
+        return self.stats.dispatches
+
+    @property
+    def steps_run(self) -> int:
+        return self.stats.steps_run
 
     # -- tables -------------------------------------------------------------
 
@@ -85,7 +121,8 @@ class FusedStepPipeline:
         self._sig = None
 
     def _build_tables(self) -> None:
-        """Stack same-bucket blocks: one table set per (pad, pad_own) bucket.
+        """Stack same-bucket blocks: one table set per (pad, pad_own, group)
+        bucket.
 
         Per bucket of B blocks the tables are the engine's per-block index /
         material arrays concatenated along the element axis, with block b's
@@ -94,17 +131,18 @@ class FusedStepPipeline:
         row."""
         import jax.numpy as jnp
 
-        groups: Dict[Tuple[int, int], List[dict]] = {}
-        for b in self.engine._blocks:
+        groups: Dict[Tuple[int, int, int], List[dict]] = {}
+        for p, b in enumerate(self.engine._blocks):
             if b is None:
                 continue
             pad = int(b["nbr_local"].shape[0])
             pad_own = int(b["own_pad"].shape[0])
-            groups.setdefault((pad, pad_own), []).append(b)
+            gid = 0 if self.groups is None else int(self.groups[p])
+            groups.setdefault((pad, pad_own, gid), []).append(b)
 
         sig = []
         tables = []
-        for (pad, pad_own), blks in sorted(groups.items()):
+        for (pad, pad_own, gid), blks in sorted(groups.items()):
             B = len(blks)
             nbr = np.concatenate(
                 [
@@ -137,7 +175,7 @@ class FusedStepPipeline:
                     "mu_o": cat("mu_o"),
                 }
             )
-            sig.append((pad, pad_own, B))
+            sig.append((pad, pad_own, B, gid))
         self._tables = tables
         self._sig = tuple(sig)
 
@@ -147,7 +185,7 @@ class FusedStepPipeline:
 
     @property
     def bucket_signature(self) -> Tuple:
-        """((pad, pad_own, n_blocks), ...) — the compile-cache key."""
+        """((pad, pad_own, n_blocks, group), ...) — the compile-cache key."""
         self._ensure()
         return self._sig
 
@@ -165,7 +203,7 @@ class FusedStepPipeline:
 
         def rhs(q, tables, base):
             out = base
-            for (pad, pad_own, B), T in zip(sig, tables):
+            for (pad, pad_own, B, _gid), T in zip(sig, tables):
                 vol = volume_rhs_impl(
                     q[T["own_pad"]], D, metrics,
                     T["rho_o"], T["lam_o"], T["mu_o"], kernel_impl=impl,
@@ -233,37 +271,229 @@ class FusedStepPipeline:
             self._run_fns[sig] = fn
         return fn
 
+    def _priced_run_fn(self, sig):
+        import jax
+
+        fn = self._priced_run_fns.get(sig)
+        if fn is None:
+            from repro.dg.rk import lsrk45_step
+
+            rhs = self._make_rhs(sig)
+
+            def run(q, res, acc, dt, n, tables, base, price):
+                # same fused step loop, with a per-partition simulated-cost
+                # accumulator riding the carry: the (link + compute) price
+                # of every step is charged inside the compiled scan.  With
+                # today's loop-invariant price the result equals price * n;
+                # the in-carry accumulator is the hook the roadmap's
+                # on-device per-step observation slots into, and a cluster
+                # pipeline only ever compiles THIS family (run(price=...)
+                # every call), so no program is compiled twice in practice.
+                def body(_, carry):
+                    q, res, acc = carry
+                    q, res = lsrk45_step(q, res, lambda x: rhs(x, tables, base), dt)
+                    return q, res, acc + price
+
+                return jax.lax.fori_loop(0, n, body, (q, res, acc))
+
+            fn = jax.jit(run, donate_argnums=(0, 1, 2))
+            self._priced_run_fns[sig] = fn
+        return fn
+
     # -- execution ----------------------------------------------------------
 
     def rhs(self, q):
         """One fused full-field rhs evaluation (the unfused-equality probe)."""
         self._ensure()
-        self.dispatches += 1
+        self.stats.record(1, 0)
         return self._rhs_fn(self._sig)(q, self._tables, self.engine.scatter_base(q))
 
     def step(self, q, res, dt):
         """One fused LSRK4(5) step; (q, res) are DONATED — callers must pass
         buffers they own (``run`` handles the copy)."""
         self._ensure()
-        self.dispatches += 1
-        self.steps_run += 1
+        self.stats.record(1, 1)
         return self._step_fn(self._sig)(
             q, res, dt, self._tables, self.engine.scatter_base(q)
         )
 
-    def run(self, q, n_steps: int, dt: Optional[float] = None, res=None):
+    def run(self, q, n_steps: int, dt: Optional[float] = None, res=None,
+            price=None):
         """Advance ``n_steps`` as ONE host dispatch (step loop with a traced
         trip count, scan over stages, donated carry).  The caller's ``q`` is
         copied once so donation never consumes a buffer the caller still
-        holds."""
+        holds.
+
+        With ``price`` (a per-partition per-step seconds vector) the
+        compiled loop also accumulates the simulated cost of every step and
+        the call returns ``(q, accumulated_seconds)`` — how
+        ``runtime.cluster.SimulatedCluster`` prices its virtual link inside
+        the scan."""
         import jax.numpy as jnp
 
         dt = dt if dt is not None else self.solver.cfl_dt()
         self._ensure()
         q = jnp.copy(q)
         res = jnp.zeros_like(q) if res is None else jnp.copy(res)
-        fn = self._run_fn(self._sig)
-        self.dispatches += 1
-        self.steps_run += int(n_steps)
-        q, _ = fn(q, res, dt, int(n_steps), self._tables, self.engine.scatter_base(q))
+        base = self.engine.scatter_base(q)
+        self.stats.record(1, int(n_steps))
+        if price is None:
+            fn = self._run_fn(self._sig)
+            q, _ = fn(q, res, dt, int(n_steps), self._tables, base)
+            return q
+        price = jnp.asarray(price, dtype=jnp.float64 if q.dtype == jnp.float64
+                            else jnp.float32)
+        fn = self._priced_run_fn(self._sig)
+        q, _, acc = fn(q, res, jnp.zeros_like(price), dt, int(n_steps),
+                       self._tables, base, price)
+        return q, acc
+
+
+class ShardedStepPipeline:
+    """The SPMD slab time loop as ONE donated shard_map program spanning all
+    devices (see module docstring).
+
+    Bound to a ``repro.dg.partitioned.PartitionedDG``: the slab
+    ``StepSchedule`` — pack edge layers, ring ``ppermute``, overlapped
+    volume interior, extended surface fold — is traced INTO the compiled
+    ``fori_loop`` over steps (traced trip count) and ``lax.scan`` over the
+    five LSRK stages, with the ``(q, res)`` carry donated.  One compiled
+    program serves every horizon and every ``dt``; host dispatches per run
+    are O(1) regardless of device count."""
+
+    def __init__(self, pdg):
+        import jax
+
+        self.pdg = pdg
+        self.solver = pdg.solver
+        self._jax = jax
+        self._rhs_c = None
+        self._step_c = None
+        self._run_c = None
+        self.stats = DispatchStats()
+
+    @property
+    def dispatches(self) -> int:
+        return self.stats.dispatches
+
+    @property
+    def steps_run(self) -> int:
+        return self.stats.steps_run
+
+    # -- program construction ----------------------------------------------
+
+    def _local_rhs(self):
+        p = self.pdg
+
+        def rhs(q, nbr, rho, lam, mu, cp, cs):
+            return p._rhs_local(q, nbr, rho, lam, mu, cp, cs)
+
+        return rhs
+
+    def _shard(self, f, n_carry_out: int):
+        from repro.jax_compat import shard_map
+
+        p = self.pdg
+        qs = p.spec_q
+        out = qs if n_carry_out == 1 else (qs,) * n_carry_out
+        return shard_map(
+            f,
+            mesh=p.mesh_axes,
+            in_specs=(qs,) * n_carry_out
+            + (self._scalar_spec(),) * (2 if n_carry_out > 1 else 0)
+            + p._operand_specs(),
+            out_specs=out,
+            check_vma=False,
+        )
+
+    @staticmethod
+    def _scalar_spec():
+        from jax.sharding import PartitionSpec
+
+        return PartitionSpec()
+
+    def _rhs_fn(self):
+        if self._rhs_c is None:
+            import jax
+
+            self._rhs_c = jax.jit(self._shard(self._local_rhs(), 1))
+        return self._rhs_c
+
+    def _step_fn(self):
+        if self._step_c is None:
+            import jax
+
+            from repro.dg.rk import lsrk45_step
+
+            local_rhs = self._local_rhs()
+
+            def local_step(q, res, dt, n, nbr, rho, lam, mu, cp, cs):
+                del n
+                return lsrk45_step(
+                    q, res, lambda x: local_rhs(x, nbr, rho, lam, mu, cp, cs), dt
+                )
+
+            self._step_c = jax.jit(self._shard(local_step, 2), donate_argnums=(0, 1))
+        return self._step_c
+
+    def _run_fn(self):
+        if self._run_c is None:
+            import jax
+
+            from repro.dg.rk import lsrk45_step
+
+            local_rhs = self._local_rhs()
+
+            def local_run(q, res, dt, n, nbr, rho, lam, mu, cp, cs):
+                # fori_loop with a TRACED trip count; the ring ppermute of
+                # the schedule's exchange phase is traced into the loop body,
+                # so the whole multi-device run is one resident program
+                def body(_, carry):
+                    q, res = carry
+                    return lsrk45_step(
+                        q, res, lambda x: local_rhs(x, nbr, rho, lam, mu, cp, cs), dt
+                    )
+
+                return jax.lax.fori_loop(0, n, body, (q, res))
+
+            self._run_c = jax.jit(self._shard(local_run, 2), donate_argnums=(0, 1))
+        return self._run_c
+
+    # -- execution ----------------------------------------------------------
+
+    def _sharded_copy(self, x):
+        """A fresh buffer with the pipeline's q-sharding — what the donated
+        carry consumes, so the caller's array survives every call."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+
+        p = self.pdg
+        return jax.device_put(jnp.copy(x), NamedSharding(p.mesh_axes, p.spec_q))
+
+    def rhs(self, q):
+        """One fused sharded rhs evaluation (the differential-test probe)."""
+        self.stats.record(1, 0)
+        return self._rhs_fn()(q, *self.pdg._operands())
+
+    def step(self, q, res, dt):
+        """One fused sharded LSRK4(5) step; (q, res) are DONATED."""
+        import jax.numpy as jnp
+
+        self.stats.record(1, 1)
+        dt = jnp.asarray(dt, q.dtype)
+        n = jnp.asarray(1, jnp.int32)
+        return self._step_fn()(q, res, dt, n, *self.pdg._operands())
+
+    def run(self, q, n_steps: int, dt: Optional[float] = None, res=None):
+        """Advance ``n_steps`` as ONE host dispatch across all devices."""
+        import jax.numpy as jnp
+
+        dt = dt if dt is not None else self.solver.cfl_dt()
+        q = self._sharded_copy(q)
+        res = self._sharded_copy(jnp.zeros_like(q) if res is None else res)
+        fn = self._run_fn()
+        self.stats.record(1, int(n_steps))
+        q, _ = fn(q, res, jnp.asarray(dt, q.dtype),
+                  jnp.asarray(int(n_steps), jnp.int32), *self.pdg._operands())
         return q

@@ -36,7 +36,31 @@ from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["StepSchedule", "CalibrationReport"]
+__all__ = ["StepSchedule", "CalibrationReport", "DispatchStats"]
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Host dispatches vs device steps advanced — the shared introspection
+    ledger of every fused step driver (``runtime.pipeline.FusedStepPipeline``
+    and ``ShardedStepPipeline`` both embed one).
+
+    The fused drivers' whole point is O(1) dispatches per ``run()``
+    regardless of step horizon, slab count and device count; the
+    dispatch-count regression tests (``tests/test_pipeline.py``,
+    ``tests/test_multidevice.py``) assert on this ledger so a future edit
+    cannot silently re-Python-loop the hot path."""
+
+    dispatches: int = 0
+    steps_run: int = 0
+
+    def record(self, dispatches: int, steps: int) -> None:
+        self.dispatches += int(dispatches)
+        self.steps_run += int(steps)
+
+    @property
+    def dispatches_per_step(self) -> float:
+        return self.dispatches / max(1, self.steps_run)
 
 
 @dataclasses.dataclass

@@ -37,4 +37,5 @@ except ModuleNotFoundError:
     def _stub(*_args, **_kwargs):
         return None
 
-    st = types.SimpleNamespace(tuples=_stub, integers=_stub, floats=_stub, lists=_stub)
+    st = types.SimpleNamespace(tuples=_stub, integers=_stub, floats=_stub, lists=_stub,
+                               sampled_from=_stub, booleans=_stub)

@@ -316,3 +316,70 @@ def test_executor_set_accel_counts_resplices():
         ex.set_accel_counts([-1, 4])
     ex.set_accel_counts(None)  # revert to accel_fraction (0.0)
     assert ex.partition.accel_mask.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Fused cluster driver: grouped batching + in-scan link pricing
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_fused_run_matches_eager_and_flat(periodic_setup):
+    """run(fused=True) — every node's block inside one donated scan-compiled
+    program — matches the eager per-step cluster driver and the flat solver
+    (to the documented ~1 ulp lsrk FMA contraction of repro/dg/rk.py)."""
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster
+
+    solver, q0 = periodic_setup
+    cl = SimulatedCluster(
+        solver,
+        [NodeProfile(name="a"), NodeProfile(name="b", speed=2.0), NodeProfile(name="a")],
+    )
+    dt = solver.cfl_dt()
+    q_eager = np.asarray(cl.run(q0, 2, dt=dt, fused=False))
+    q_fused = np.asarray(cl.run(q0, 2, dt=dt))
+    np.testing.assert_allclose(q_fused, q_eager, rtol=1e-12, atol=1e-14)
+    q_flat = np.asarray(_flat_reference(solver, q0, 2, dt))
+    np.testing.assert_allclose(q_fused, q_flat, rtol=1e-12, atol=1e-14)
+    # single fused rhs evaluation stays exactly bitwise vs the flat solver
+    pipe = cl.fused_pipeline()
+    assert (np.asarray(pipe.rhs(q0)) == np.asarray(solver.rhs(q0))).all()
+
+
+def test_cluster_fused_groups_by_profile(periodic_setup):
+    """Same-profile node groups are batched separately: the bucket signature
+    carries one group per distinct (name, speed) profile class."""
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster
+
+    solver, _ = periodic_setup
+    cl = SimulatedCluster(
+        solver,
+        [NodeProfile(name="a"), NodeProfile(name="b", speed=2.0), NodeProfile(name="a")],
+    )
+    np.testing.assert_array_equal(cl.profile_groups(), [0, 1, 0])
+    sig = cl.fused_pipeline().bucket_signature
+    assert sorted(set(g for (_, _, _, g) in sig)) == [0, 1]
+    # the "a" nodes may share launches; "b" never rides with them
+    assert sum(B for (_, _, B, g) in sig if g == 1) == 1
+
+
+def test_cluster_fused_prices_link_inside_scan(periodic_setup):
+    """The simulated per-node step price (compute/speed + alpha-beta link on
+    the exact face cuts) is accumulated inside the compiled scan and feeds
+    the executor on the observe path."""
+    from repro.runtime.cluster import NodeProfile, SimulatedCluster
+
+    solver, q0 = periodic_setup
+    cl = SimulatedCluster(solver, [NodeProfile(speed=1.0), NodeProfile(speed=3.0)],
+                          rebalance_every=2)
+    dt = solver.cfl_dt()
+    expect = cl.step_times()
+    cl.run(q0, 2, dt=dt)
+    np.testing.assert_allclose(cl.last_sim_times, expect, rtol=1e-12)
+    # comm is priced in: the accumulated times exceed pure compute/speed
+    assert (cl.last_sim_times >= cl.comm_times()).all()
+    # observe path: the in-scan prices enter the EWMA and the executor
+    # rebalances on schedule toward the fast node
+    q1 = cl.run(q0, 4, dt=dt, observe=True)
+    assert cl.executor.round >= 1
+    assert cl.counts[1] > cl.counts[0]
+    assert np.isfinite(np.asarray(q1)).all()

@@ -13,6 +13,7 @@ import pytest
 
 import jax.numpy as jnp
 
+from hypothesis_shim import given, settings, st
 from repro.dg.mesh import make_brick
 from repro.dg.rk import LSRK_A, LSRK_B, lsrk45_step, lsrk_coeffs
 from repro.dg.solver import DGSolver, gaussian_pulse, make_two_tree_solver
@@ -186,7 +187,7 @@ def test_fused_pipeline_batches_same_bucket_blocks():
     eng = BlockedDGEngine(solver, ex)
     pipe = eng.pipeline()
     sig = pipe.bucket_signature
-    assert sum(B for (_, _, B) in sig) == 4
+    assert sum(B for (_, _, B, _) in sig) == 4
     assert len(sig) < 4  # strictly fewer launches than blocks
     # a no-op resplice keeps the signature -> compiled run fn is reused
     n_fns = len(pipe._run_fns)
@@ -250,3 +251,197 @@ def test_surface_rhs_interpret_matches_xla_on_periodic():
     b = surface_rhs(q, solver.neighbors, solver.lift, solver.rho_j, solver.lam_j,
                     solver.mu_j, solver.cp_j, solver.cs_j, kernel_impl="interpret")
     np.testing.assert_allclose(a, b, rtol=1e-10, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-count regression: the hot path must never re-Python-loop
+# ---------------------------------------------------------------------------
+
+
+def _wrap_counting(cache, key, fn):
+    """Replace a cached compiled callable with a call-counting wrapper;
+    returns the counter list."""
+    calls = []
+
+    def wrapper(*a, **k):
+        calls.append(1)
+        return fn(*a, **k)
+
+    cache[key] = wrapper
+    return calls
+
+
+def test_dispatch_count_fused_run_one_per_run():
+    """run() is ONE invocation of ONE compiled program, for every horizon —
+    counted on the compiled callable itself, so a future edit that quietly
+    re-Python-loops the step driver fails here."""
+    solver = _periodic_solver()
+    K = solver.mesh.K
+    q0 = _rand_state(solver)
+    ex = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid, bucket=8)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    sig = pipe.bucket_signature
+    run_calls = _wrap_counting(pipe._run_fns, sig, pipe._run_fn(sig))
+    step_calls = _wrap_counting(pipe._step_fns, sig, pipe._step_fn(sig))
+    for n in (1, 4, 9):
+        before = len(run_calls)
+        d0 = pipe.dispatches
+        eng.run(q0, n)
+        assert len(run_calls) - before == 1, (n, len(run_calls) - before)
+        assert len(step_calls) == 0  # never falls back to per-step stepping
+        assert pipe.dispatches - d0 == 1
+    assert pipe.stats.dispatches_per_step < 1.0
+
+
+def test_dispatch_count_observe_path_one_per_step():
+    """run(observe=True) steps the fused pipeline one dispatch per step
+    (the executor needs a host boundary to observe at) — and exactly one."""
+    solver = make_two_tree_solver(grid=(6, 4, 4), order=2, extent=(2.0, 1.0, 1.0))
+    q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5))
+    ex = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8,
+                                 rebalance_every=0)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    sig = pipe.bucket_signature
+    step_calls = _wrap_counting(pipe._step_fns, sig, pipe._step_fn(sig))
+    run_calls = _wrap_counting(pipe._run_fns, sig, pipe._run_fn(sig))
+    eng.run(q0, 4, observe=True)
+    assert len(step_calls) == 4  # 1 fused dispatch per observed step
+    assert len(run_calls) == 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties: random shapes, buckets, resplice sequences
+# ---------------------------------------------------------------------------
+
+
+def _scatter_coverage(eng):
+    """The fused scatter rows must cover each element exactly once (dump row
+    K excluded) — the disjointness that makes bucket batching exact."""
+    K = eng.solver.mesh.K
+    rows = np.concatenate(
+        [np.asarray(b["scat"]) for b in eng._blocks if b is not None]
+    )
+    real = rows[rows < K]
+    assert len(np.unique(real)) == len(real), "overlapping scatter rows"
+    assert set(real.tolist()) == set(range(K)), "scatter rows miss elements"
+    assert (rows[rows >= K] == K).all()  # pad rows all hit the dump row
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(1, 3),
+       st.integers(1, 4), st.sampled_from([2, 4, 8, 16]))
+def test_fused_pipeline_property_random_mesh_and_buckets(nx, ny, nz, P, bucket):
+    """Property: for randomized mesh shapes, partition counts and bucket
+    sizes, the fused pipeline stays bitwise-identical to the unfused
+    schedule and its scatter rows cover the field disjointly."""
+    grid = (nx, ny, nz)
+    mesh = make_brick(grid, (1.0, 1.0, 0.5), periodic=True)
+    K = mesh.K
+    P = min(P, K)
+    solver = DGSolver(mesh=mesh, order=1, rho=np.ones(K), lam=np.ones(K),
+                      mu=np.zeros(K))
+    ex = NestedPartitionExecutor(K, P, grid_dims=grid, bucket=bucket)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    _scatter_coverage(eng)
+    q0 = _rand_state(solver, seed=nx * 100 + ny * 10 + nz + P + bucket)
+    r_fused = np.asarray(pipe.rhs(q0))
+    r_unfused = np.asarray(eng.rhs(q0))
+    assert (r_fused == r_unfused).all(), np.abs(r_fused - r_unfused).max()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.lists(st.floats(0.2, 5.0), min_size=3, max_size=3),
+                min_size=1, max_size=4),
+       st.sampled_from([4, 8]))
+def test_fused_pipeline_property_resplice_sequences(times_seq, bucket):
+    """Property: any sequence of observe->rebalance resplices preserves
+    fused==unfused bitwise equality and disjoint scatter coverage."""
+    solver = _periodic_solver(grid=(4, 4, 2), order=1)
+    K = solver.mesh.K
+    ex = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid,
+                                 bucket=bucket, smoothing=1.0)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    q0 = _rand_state(solver, seed=bucket)
+    for times in times_seq:
+        ex.observe(np.asarray(times))
+        ex.rebalance()
+        _scatter_coverage(eng)
+        r_fused = np.asarray(pipe.rhs(q0))
+        r_unfused = np.asarray(eng.rhs(q0))
+        assert (r_fused == r_unfused).all(), np.abs(r_fused - r_unfused).max()
+        assert int(ex.counts.sum()) == K
+
+
+def test_fused_pipeline_grouped_buckets_stay_bitwise():
+    """A partition->group map splits buckets (same-profile cluster batching)
+    without changing the arithmetic: grouped fused == ungrouped fused ==
+    unfused, bitwise, and the signature separates the groups."""
+    solver = _periodic_solver(grid=(4, 4, 4))
+    K = solver.mesh.K
+    ex = NestedPartitionExecutor(K, 4, grid_dims=solver.mesh.grid, bucket=16)
+    eng = BlockedDGEngine(solver, ex)
+    plain = eng.pipeline()
+    grouped = eng.pipeline(groups=[0, 1, 0, 1])
+    gids = sorted(set(g for (_, _, _, g) in grouped.bucket_signature))
+    assert gids == [0, 1]
+    assert len(grouped.bucket_signature) > len(plain.bucket_signature)
+    q0 = _rand_state(solver)
+    r_plain = np.asarray(plain.rhs(q0))
+    r_grouped = np.asarray(grouped.rhs(q0))
+    r_unfused = np.asarray(eng.rhs(q0))
+    assert (r_plain == r_unfused).all()
+    assert (r_grouped == r_unfused).all()
+
+
+def test_sharded_pipeline_single_device_mesh():
+    """ShardedStepPipeline on a 1-device mesh (no fake-device flags needed):
+    the same shard_map program structure, bitwise vs the flat solver, one
+    dispatch per run — the in-process twin of tests/test_multidevice.py."""
+    import jax
+
+    from repro.dg.partitioned import PartitionedDG
+
+    solver = _periodic_solver()
+    q0 = _rand_state(solver)
+    dt = solver.cfl_dt()
+    mesh = jax.make_mesh((1,), ("data",))
+    pdg = PartitionedDG(solver=solver, mesh_axes=mesh)
+    pipe = pdg.pipeline()
+    qp = pdg.permute_in(q0)
+    r_flat = np.asarray(jax.jit(solver.rhs)(q0))
+    r_shard = pdg.permute_out(np.asarray(pipe.rhs(qp)))
+    assert (r_flat == r_shard).all(), np.abs(r_flat - r_shard).max()
+    q_flat = np.asarray(solver.run(q0, 3, dt))
+    d0 = pipe.dispatches
+    q_shard = pdg.permute_out(np.asarray(pipe.run(qp, 3, dt=dt)))
+    assert pipe.dispatches - d0 == 1 and pipe.steps_run >= 3
+    assert (q_flat == q_shard).all(), np.abs(q_flat - q_shard).max()
+    # the eager reference driver and the fused step agree with the program
+    q_eager = pdg.permute_out(np.asarray(pdg.run(qp, 3, dt=dt, fused=False)))
+    assert (q_eager == q_shard).all()
+    # donated single fused step consumes its operands but not the original
+    res = jnp.zeros_like(qp)
+    q1, res1 = pipe.step(pipe._sharded_copy(qp), pipe._sharded_copy(res), dt)
+    assert np.isfinite(np.asarray(q1)).all()
+    assert np.isfinite(np.asarray(qp)).all()
+
+
+def test_fused_run_priced_accumulates_in_scan():
+    """run(price=...) returns the same field as the unpriced run plus the
+    per-partition cost accumulated inside the compiled loop (price * n)."""
+    solver = _periodic_solver()
+    K = solver.mesh.K
+    q0 = _rand_state(solver)
+    dt = solver.cfl_dt()
+    ex = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid, bucket=8)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    price = np.array([1e-3, 2e-3, 3e-3])
+    q_plain = np.asarray(pipe.run(q0, 4, dt=dt))
+    q_priced, acc = pipe.run(q0, 4, dt=dt, price=price)
+    assert (np.asarray(q_priced) == q_plain).all()
+    np.testing.assert_allclose(np.asarray(acc), price * 4, rtol=1e-12)
