@@ -17,6 +17,7 @@ def main() -> None:
         fig5_3_transfer,
         fig6_2_kernels,
         pipeline_throughput,
+        serve_latency,
         table6_1_speedup,
     )
 
@@ -27,6 +28,7 @@ def main() -> None:
         "table6_1": table6_1_speedup.run,
         "fig6_2": fig6_2_kernels.run,
         "pipeline": pipeline_throughput.run,
+        "serve": serve_latency.run,
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("suites", nargs="*", default=[],
@@ -46,7 +48,15 @@ def main() -> None:
                     help="pipeline: add a sharded-fused row over this many "
                          "devices (needs XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N on CPU)")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print every registered arch/scenario and exit")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        from repro.configs.registry import format_listing
+
+        print(format_listing())
+        return
 
     requested = list(args.suites) + list(args.suite)
     unknown = [s for s in requested + args.skip if s not in suites]

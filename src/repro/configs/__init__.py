@@ -15,3 +15,12 @@ from repro.configs import (  # noqa: F401
     stablelm_12b,
 )
 from repro.configs.shapes import SHAPES, Cell, cells_for, smoke_config  # noqa: F401
+from repro.configs.registry import (  # noqa: F401
+    Scenario,
+    format_listing,
+    list_archs,
+    list_scenarios,
+    register_scenario,
+    resolve_arch,
+    resolve_scenario,
+)

@@ -1,0 +1,176 @@
+"""Flag-registered scenario/config registry (MuZeroGoJax `_build_config` style).
+
+One lookup table for everything a CLI can name:
+
+  * **archs** — every ``configs/*.py`` model architecture, delegated to the
+    ``repro.models.zoo`` registry (importing ``repro.configs`` populates it);
+  * **scenarios** — named DG mesh / cluster setups (grid, order, materials,
+    node fleet) as zero-argument-callable factories with overridable kwargs.
+
+``benchmarks/run.py``, ``launch/serve.py`` and ``launch/train.py`` resolve
+``--arch`` / ``--scenario`` through here instead of hard-coded imports, and
+``--list-scenarios`` prints :func:`format_listing`.  Registration is
+decentralized: a new config module calls :func:`register_scenario` at import
+time and every CLI picks it up by name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List
+
+__all__ = [
+    "Scenario",
+    "register_scenario",
+    "resolve_arch",
+    "resolve_scenario",
+    "list_archs",
+    "list_scenarios",
+    "format_listing",
+]
+
+
+# -- archs (model configs) ---------------------------------------------------
+
+
+def _zoo():
+    # importing the configs package registers every arch with the zoo
+    import repro.configs  # noqa: F401
+    from repro.models import zoo
+
+    return zoo
+
+
+def resolve_arch(name: str):
+    """Arch id -> ``ModelConfig`` (KeyError lists the known ids)."""
+    return _zoo().get_config(name)
+
+
+def list_archs() -> List[str]:
+    return _zoo().list_archs()
+
+
+# -- scenarios (DG mesh / cluster setups) ------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, buildable experiment setup.
+
+    ``factory(**overrides)`` constructs the scenario object (a solver, a
+    cluster, ...); ``defaults`` documents the kwargs the factory accepts
+    and their registered values — CLIs surface them, overrides replace
+    them."""
+
+    name: str
+    description: str
+    factory: Callable[..., Any]
+    defaults: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def build(self, **overrides):
+        kwargs = dict(self.defaults)
+        kwargs.update(overrides)
+        return self.factory(**kwargs)
+
+
+_SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(
+    name: str,
+    description: str,
+    factory: Callable[..., Any],
+    **defaults,
+) -> Scenario:
+    """Register (and return) a scenario; re-registering a name replaces it."""
+    sc = Scenario(name=name, description=description, factory=factory,
+                  defaults=dict(defaults))
+    _SCENARIOS[name] = sc
+    return sc
+
+
+def resolve_scenario(name: str) -> Scenario:
+    _builtin()  # make sure the built-ins are in before the lookup
+    if name not in _SCENARIOS:
+        raise KeyError(
+            f"unknown scenario '{name}'; known: {sorted(_SCENARIOS)}"
+        )
+    return _SCENARIOS[name]
+
+
+def list_scenarios() -> List[str]:
+    _builtin()
+    return sorted(_SCENARIOS)
+
+
+def format_listing() -> str:
+    """The ``--list-scenarios`` text: every registered arch and scenario."""
+    lines = ["archs:"]
+    for a in list_archs():
+        lines.append(f"  {a}")
+    lines.append("scenarios:")
+    for name in list_scenarios():
+        sc = _SCENARIOS[name]
+        kv = " ".join(f"{k}={v}" for k, v in sc.defaults.items())
+        lines.append(f"  {name} — {sc.description}" + (f" [{kv}]" if kv else ""))
+    return "\n".join(lines)
+
+
+# -- built-in scenarios ------------------------------------------------------
+
+_BUILTIN_DONE = False
+
+
+def _builtin() -> None:
+    """Register the repo's standard scenarios (idempotent, lazy so that
+    importing the registry stays cheap)."""
+    global _BUILTIN_DONE
+    if _BUILTIN_DONE:
+        return
+    _BUILTIN_DONE = True
+
+    def two_tree(**kw):
+        from repro.dg.solver import make_two_tree_solver
+
+        return make_two_tree_solver(**kw)
+
+    def paper_brick(**kw):
+        from repro.configs.dg_wave import CONFIG
+        from repro.dg.solver import make_two_tree_solver
+
+        kw.setdefault("grid", CONFIG.grid)
+        kw.setdefault("order", CONFIG.order)
+        return make_two_tree_solver(**kw)
+
+    def stampede(n_nodes=2, order=2, grid=(8, 4, 4), speed_skew=1.0, **kw):
+        from repro.dg.solver import make_two_tree_solver
+        from repro.runtime.cluster import SimulatedCluster, stampede_profile
+
+        solver = make_two_tree_solver(grid=grid, order=order, **kw)
+        profiles = [
+            stampede_profile(order=order, name=f"n{i}",
+                             speed=speed_skew**i)
+            for i in range(n_nodes)
+        ]
+        return SimulatedCluster(solver, profiles)
+
+    register_scenario(
+        "dg-two-tree",
+        "two-material elastic/acoustic brick (Fig 6.1 geometry, test size)",
+        two_tree, grid=(8, 4, 4), order=3, extent=(2.0, 1.0, 1.0),
+    )
+    register_scenario(
+        "dg-smoke",
+        "tiny two-tree brick for CI smoke runs",
+        two_tree, grid=(4, 2, 2), order=2,
+    )
+    register_scenario(
+        "dg-paper",
+        "the paper's evaluation brick (order 7, 8192 elements/node)",
+        paper_brick,
+    )
+    register_scenario(
+        "stampede-cluster",
+        "simulated heterogeneous Stampede fleet on the two-tree brick",
+        stampede, n_nodes=2, order=2, grid=(8, 4, 4), speed_skew=1.0,
+    )

@@ -44,11 +44,12 @@ inside the compiled step loop.  The per-step jitted driver survives as
 ``fused=False`` solely for calibration/reference (mirroring how
 ``BlockedDGEngine`` kept the four-phase path).
 
-Online rebalancing: ``run(..., executor=...)`` adopts the step-driver API of
+Online rebalancing: ``run(..., observe=True)`` adopts the step-driver API of
 ``repro.runtime.executor.NestedPartitionExecutor`` — each fused chunk's wall
-time is observed (synchronous-step attribution) and the executor re-solves
-the nested split on schedule (``make_executor`` builds one matching this
-decomposition).
+time is observed (synchronous-step attribution) and the bound executor
+(``bind_executor`` / ``make_executor``) re-solves the nested split on
+schedule.  The pre-protocol ``run(executor=...)`` spelling keeps a
+one-release deprecation shim.
 """
 
 from __future__ import annotations
@@ -188,6 +189,7 @@ class PartitionedDG:
         self.spec_e = P(self.axis)
         self._pipeline = None
         self._step_jit = None
+        self._executor = None
 
     # ------------------------------------------------------------------
     def permute_in(self, q_flat: jnp.ndarray) -> jnp.ndarray:
@@ -295,27 +297,89 @@ class PartitionedDG:
             self._pipeline = ShardedStepPipeline(self)
         return self._pipeline
 
+    def bind_executor(self, executor=None):
+        """Install (or lazily create) the engine-owned executor that
+        ``run(observe=True)`` feeds.  Returns it."""
+        if executor is not None:
+            self._executor = executor
+        elif getattr(self, "_executor", None) is None:
+            self._executor = self.make_executor()
+        return self._executor
+
+    def calibrate(self, q_part: jnp.ndarray, reps: int = 1,
+                  dt: Optional[float] = None) -> "CalibrationReport":
+        """Synchronous-step calibration: under the SPMD barrier every slab's
+        step time equals the wall time, so the report attributes the same
+        measured whole-step seconds to each of the P slabs
+        (``observe_total`` semantics).  Per-slab skew is not separable on
+        this engine — the blocked engine exists for that."""
+        from repro.runtime.schedule import CalibrationReport
+
+        dt = dt or self.solver.cfl_dt()
+        if self._step_jit is None:
+            self._step_jit = jax.jit(
+                lambda q, res, dt: lsrk45_step(q, res, self.rhs, dt)
+            )
+        res = jnp.zeros_like(q_part)
+        dt_j = jnp.asarray(dt, q_part.dtype)
+        out = self._step_jit(q_part, res, dt_j)
+        jax.block_until_ready(out)  # warmup / compile
+        ts = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            out = self._step_jit(q_part, res, dt_j)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return CalibrationReport.from_totals(np.full(self.P, ts[len(ts) // 2]))
+
+    def resplice(self, plan) -> None:
+        """Apply a solved plan to the bound executor.  Slab geometry itself
+        is SPMD-fixed (equal K/P slabs inside ``shard_map``); the plan
+        lands in the executor's bookkeeping/hooks, which is where blocked
+        consumers of the same executor pick it up."""
+        self.bind_executor().apply(plan)
+
     def run(
         self,
         q_part: jnp.ndarray,
         n_steps: int,
         dt: Optional[float] = None,
-        executor=None,
+        *,
+        observe: bool = False,
         fused: bool = True,
+        executor=None,
     ) -> jnp.ndarray:
         """Advance ``n_steps``.
 
         ``fused`` (default) drives the ``ShardedStepPipeline``: the whole
         time loop runs as a single donated device program spanning all
-        devices — one host dispatch per run (per rebalance chunk with an
-        ``executor``), independent of device count, slab count and horizon.
+        devices — one host dispatch per run (per rebalance chunk when
+        observing), independent of device count, slab count and horizon.
         ``fused=False`` is the eager per-step reference driver (one jitted
         step per host dispatch) kept for calibration and differential tests.
 
-        With an ``executor`` the run is segmented on its rebalance schedule:
-        each segment's wall time is observed (synchronous-step attribution)
-        and the nested split re-solved — the calibrate->solve->resplice loop
-        running alongside the SPMD compute."""
+        With ``observe=True`` the run is segmented on the bound executor's
+        rebalance schedule: each segment's wall time is observed
+        (synchronous-step attribution) and the nested split re-solved — the
+        calibrate->solve->resplice loop running alongside the SPMD compute.
+
+        ``executor=`` is the pre-Engine-protocol spelling of the same
+        thing and is deprecated: pass ``observe=True`` after
+        ``bind_executor(executor)`` instead (one-release shim)."""
+        if executor is not None:
+            import warnings
+
+            warnings.warn(
+                "PartitionedDG.run(executor=...) is deprecated; use "
+                "bind_executor(executor) + run(observe=True) — the unified "
+                "Engine protocol spelling",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            self.bind_executor(executor)
+            observe = True
+        executor = self.bind_executor() if observe else None
         dt = dt or self.solver.cfl_dt()
 
         if fused:

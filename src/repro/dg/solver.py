@@ -84,9 +84,23 @@ class DGSolver:
     def step(self, q, res, dt):
         return lsrk45_step(q, res, self.rhs, dt)
 
-    def run(self, q, n_steps: int, dt: Optional[float] = None):
+    def run(self, q, n_steps: int, dt: Optional[float] = None, *,
+            observe: bool = False, fused: bool = True):
+        """Advance ``n_steps`` (the Engine protocol's driver).
+
+        ``fused`` (default) scan-compiles the whole horizon into one
+        program; ``fused=False`` is the eager per-step reference.
+        ``observe`` is accepted for protocol compatibility and ignored —
+        the flat solver has no partitions to attribute time to."""
+        del observe
         dt = dt or self.cfl_dt()
         res = jnp.zeros_like(q)
+
+        if not fused:
+            step1 = jax.jit(lambda q, res: lsrk45_step(q, res, self.rhs, dt))
+            for _ in range(n_steps):
+                q, res = step1(q, res)
+            return q
 
         @jax.jit
         def many(q, res):
@@ -100,6 +114,34 @@ class DGSolver:
 
         q, _ = many(q, res)
         return q
+
+    def calibrate(self, q, reps: int = 2, dt: Optional[float] = None) -> "CalibrationReport":
+        """Whole-step wall seconds as a single-partition report.  The flat
+        solver is one unpartitioned block, so the report carries the total
+        in ``interior_s`` (``CalibrationReport.from_totals`` semantics: no
+        phase-composition claim)."""
+        import time
+
+        from repro.runtime.schedule import CalibrationReport
+
+        dt = dt or self.cfl_dt()
+        res = jnp.zeros_like(q)
+        step1 = jax.jit(lambda q, res: lsrk45_step(q, res, self.rhs, dt))
+        out = step1(q, res)
+        jax.block_until_ready(out)  # warmup / compile
+        ts = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            out = step1(q, res)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return CalibrationReport.from_totals([ts[len(ts) // 2]])
+
+    def resplice(self, plan=None) -> None:
+        """Engine-protocol no-op: a flat solver has a single partition and
+        nothing to re-splice."""
+        del plan
 
     # ------------------------------------------------------------------
     def energy(self, q: jnp.ndarray) -> float:

@@ -1,183 +1,88 @@
-"""Batched serving driver: prefill a prompt batch, decode with greedy
-sampling, report per-token latency/throughput.
+"""Serving CLI — argument parsing over ``repro.runtime.serving``.
 
-The request batch is spliced across ``--partitions`` virtual partitions by
-an online ``repro.runtime.executor.NestedPartitionExecutor`` instead of the
-old ad-hoc static split: a calibration pass times each partition's phases
-into a ``CalibrationReport`` (prefill as the boundary phase — per-request
-setup cost — and decode as the interior phase), the executor re-solves the
-row split from that report (``plan_from_report``, paper section 5.6 run
-online), and the serving pass uses the calibrated counts.  With
-``--partitions 1`` (default) the flow is the classic single-batch path, but
-still driven through the executor's step API.
+Two modes:
 
-The greedy decode loop itself is fused by default (``--fused-decode``): the
-whole generation is one ``lax.scan``-compiled, cache-donating device
-program — 1 host dispatch per sub-batch instead of one per token — the
-serving-side twin of the blocked engine's ``FusedStepPipeline``.
-``--no-fused-decode`` restores the per-token Python loop.
+* **one-shot** (default): prefill a prompt batch, decode ``--gen`` greedy
+  tokens, report per-token latency/throughput.  With ``--partitions P`` the
+  batch is spliced across P virtual partitions by an online
+  ``NestedPartitionExecutor``: a calibration pass times each partition's
+  phases into a ``CalibrationReport`` (prefill = boundary, decode =
+  interior), the executor re-solves the row split (``plan_from_report``,
+  paper section 5.6 run online), and the serving pass uses the calibrated
+  counts.  The decode loop is fused by default (``--fused-decode``): one
+  ``lax.scan``-compiled, cache-donating dispatch per sub-batch;
+  ``--no-fused-decode`` restores the per-token Python loop.
+
+* **``--serve-loop``**: the continuous-batching request loop
+  (``ContinuousBatchingLoop``) over a synthetic Poisson arrival trace —
+  admission control and load shedding priced from the calibration report,
+  per-request SLO timestamps written as JSON via ``--trace-out``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --batch 4 --prompt-len 64 --gen 32 --partitions 2
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+      --serve-loop --requests 12 --load 1.0 --trace-out trace.json
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.shapes import smoke_config
 from repro.data.pipeline import _rng
-from repro.launch.mesh import debug_mesh, make_production_mesh
-from repro.models.zoo import LM, get_config
-from repro.parallel.steps import make_serve_step, make_shardings
-from repro.runtime import CalibrationReport, NestedPartitionExecutor
+from repro.runtime.serving import (
+    SLO,
+    ContinuousBatchingLoop,
+    ServeKernels,
+    build_lm,
+    calibrate_split,
+    decode_batch,
+    poisson_trace,
+    warm_batch,
+)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--partitions", type=int, default=1,
-                    help="virtual partitions the request batch is spliced over")
-    ap.add_argument("--calib-gen", type=int, default=4,
-                    help="decode steps per partition in the calibration pass")
-    ap.add_argument("--fused-decode", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="scan-compile the greedy decode loop into one "
-                         "donated dispatch per sub-batch (default on)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None,
-                    help="write the generated (batch, gen) token matrix as "
-                         ".npy — lets the determinism tests diff two runs "
-                         "(and fused vs unfused decode) bitwise")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if cfg.is_encoder_only:
-        raise SystemExit(f"{cfg.arch_id} is encoder-only: no decode serving")
-    if args.smoke:
-        cfg = smoke_config(cfg)
-        mesh = debug_mesh()
-    else:
-        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
-    ep = max(1, min(cfg.n_experts, mesh.shape["data"])) if cfg.n_experts else 1
-    lm = LM(cfg, ep_size=ep)
-    params = lm.init(jax.random.PRNGKey(args.seed))
-
+def run_oneshot(args) -> None:
+    cfg, lm, params, mesh = build_lm(
+        args.arch, smoke=args.smoke, mesh=args.mesh, seed=args.seed
+    )
     g = _rng(args.seed, 0)
     prompts = g.integers(0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
-
-    sh = make_shardings(lm, mesh, kind="decode", batch_shardable=False)
-    raw_step = make_serve_step(lm, sh)
-    serve_step = jax.jit(raw_step, donate_argnums=(1,))
-    prefill = jax.jit(lambda p, b: lm.prefill(p, b, max_len=args.prompt_len + args.gen + 8))
-
-    from functools import partial
-
-    @partial(jax.jit, static_argnums=(2,), donate_argnums=(1,))
-    def decode_scan(p, carry, n):
-        """n greedy decode steps as ONE program: lax.scan over tokens with
-        the (cache, tok) carry donated.  The final cache is returned (even
-        though serving discards it) so every donated leaf aliases an output
-        — otherwise jax warns 'donated buffers were not usable' per run."""
-
-        def body(carry, _):
-            cache, tok = carry
-            tok, cache = raw_step(p, cache, tok)
-            return (cache, tok), tok
-
-        (cache, tok), toks = jax.lax.scan(body, carry, None, length=n)
-        return toks, tok, cache
-
-    def decode_rows(rows: np.ndarray, n_gen: int):
-        """Prefill + greedy-decode a sub-batch; returns
-        (gen, prefill_seconds, decode_seconds)."""
-        t0 = time.time()
-        logits, cache = prefill(params, {"tokens": jnp.asarray(rows)})
-        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab_size, logits, -jnp.inf)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        jax.block_until_ready(tok)
-        t_prefill = time.time() - t0
-        out = [np.asarray(tok)]
-        t1 = time.time()
-        if args.fused_decode and n_gen > 1:
-            toks, tok, _ = decode_scan(params, (cache, tok), n_gen - 1)
-            jax.block_until_ready(toks)
-            out.extend(np.asarray(toks))  # (n_gen-1, B) rows
-        else:
-            for _ in range(n_gen - 1):
-                tok, cache = serve_step(params, cache, tok)
-                out.append(np.asarray(tok))
-            jax.block_until_ready(tok)
-        return np.stack(out, axis=1), t_prefill, time.time() - t1
+    kernels = ServeKernels(lm, mesh, max_len=args.prompt_len + args.gen + 8)
 
     P = max(1, min(args.partitions, args.batch))
-    executor = NestedPartitionExecutor(args.batch, P, bucket=1, smoothing=1.0)
-
-    warmed = set()
-
-    def warm(offsets, n_gen=3):
-        """Compile every sub-batch shape before it is timed.  Unfused: 3
-        steps cover prefill plus both decode cache layouts (the donated
-        cache changes layout after the first serve_step call).  Fused: the
-        scan length is part of the compiled program, so warm with the real
-        generation length — this executes one throwaway full generation per
-        distinct shape (AOT ``lower().compile()`` would avoid the execution
-        but does not populate jit's dispatch cache), the standard
-        warmup-for-steady-state tradeoff; the timed pass stays compile-free."""
-        n = n_gen if args.fused_decode else 3
-        for p in range(P):
-            rows = prompts[offsets[p]:offsets[p + 1]]
-            if len(rows) and (len(rows), n) not in warmed:
-                decode_rows(rows, n)
-                warmed.add((len(rows), n))
-
     if P > 1:
-        # calibration pass: time each partition's phases on the current
-        # (equal) split — prefill is the boundary phase (per-request setup),
-        # decode the interior phase — then re-solve the row counts from the
-        # phase-resolved report
-        t_prefill = np.zeros(P)
-        t_decode = np.zeros(P)
-        offs = executor.offsets
-        warm(offs, max(2, args.calib_gen))
-        for p in range(P):
-            rows = prompts[offs[p]:offs[p + 1]]
-            if len(rows) == 0:
-                continue
-            _, tp, td = decode_rows(rows, max(2, args.calib_gen))
-            t_prefill[p], t_decode[p] = tp, td
-        report = CalibrationReport(boundary_s=t_prefill, interior_s=t_decode,
-                                   transfer_s=np.zeros(P))
-        executor.observe(report.step_s)
-        executor.plan_from_report(report)
+        executor, report = calibrate_split(
+            kernels, params, prompts, P,
+            calib_gen=args.calib_gen, fused=args.fused_decode,
+        )
         print("calibration report:")
         print(report.summary())
         print(f"calibrated split: counts={executor.counts.tolist()} "
               f"(round {executor.round}, predicted makespan "
               f"{executor.predicted_makespan() * 1e3:.1f}ms)")
+    else:
+        from repro.runtime.executor import NestedPartitionExecutor
+
+        executor = NestedPartitionExecutor(args.batch, P, bucket=1, smoothing=1.0)
 
     # serving pass on the (re)calibrated splice; contiguous splice keeps the
     # original row order under concatenation.  Warm unconditionally (P=1
     # included) so the timed pass never measures prefill/scan compilation.
-    warm(executor.offsets, args.gen)
+    offs = executor.offsets
+    for p in range(P):
+        warm_batch(kernels, params, prompts[offs[p]:offs[p + 1]], args.gen,
+                   fused=args.fused_decode)
     parts, per_part = [], []
     t_prefill_all, t_decode_all = 0.0, 0.0
-    offs = executor.offsets
     for p in range(P):
         rows = prompts[offs[p]:offs[p + 1]]
         if len(rows) == 0:
             continue
-        gen_p, tp, td = decode_rows(rows, args.gen)
+        gen_p, tp, td = decode_batch(kernels, params, rows, args.gen,
+                                     fused=args.fused_decode)
         parts.append(gen_p)
         per_part.append((p, int(len(rows)), tp + td))
         t_prefill_all += tp
@@ -199,6 +104,118 @@ def main():
     if args.out:
         np.save(args.out, gen)
         print(f"wrote {args.out}")
+
+
+def run_loop(args) -> None:
+    cfg, lm, params, mesh = build_lm(
+        args.arch, smoke=args.smoke, mesh=args.mesh, seed=args.seed
+    )
+    kernels = ServeKernels(lm, mesh, max_len=args.prompt_len + args.max_new)
+    slo = None
+    if args.slo_ttft is not None or args.slo_tok is not None:
+        slo = SLO(ttft_s=args.slo_ttft or 1.0, tok_s=args.slo_tok or 0.05)
+    loop = ContinuousBatchingLoop(
+        kernels, params,
+        capacity=args.capacity, chunk=args.chunk,
+        partitions=args.partitions, bucket=args.bucket,
+        calib_gen=args.calib_gen, slo=slo, clock=args.clock,
+    )
+    # the trace rate is expressed against the calibrated service rate, so
+    # calibrate first (on a seed trace's prompts), then price the arrivals
+    seed_trace = poisson_trace(
+        max(args.capacity, 1), 1.0, prompt_len=args.prompt_len,
+        vocab=cfg.vocab_size, max_new=args.max_new, seed=args.seed,
+    )
+    loop._ensure_calibrated(seed_trace)
+    rate = args.rate if args.rate > 0 else args.load * loop.service_rate_rps(args.max_new)
+    trace = poisson_trace(
+        args.requests, rate, prompt_len=args.prompt_len,
+        vocab=cfg.vocab_size, max_new=args.max_new, seed=args.seed,
+    )
+    summary = loop.run(trace)
+    print(f"arch={cfg.arch_id} capacity={args.capacity} chunk={args.chunk} "
+          f"clock={args.clock} offered={rate:.2f} req/s")
+    for k, v in summary.to_dict().items():
+        print(f"  {k}={v}")
+    if summary.dispatches_per_chunk != 1.0:
+        raise SystemExit(
+            f"decode chunk not fused: {summary.dispatches_per_chunk} dispatches/chunk"
+        )
+    if args.trace_out:
+        loop.write_trace(args.trace_out)
+        print(f"wrote {args.trace_out}")
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump({"offered_rps": rate, **summary.to_dict()}, f, indent=2)
+        print(f"wrote {args.bench_out}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="model arch id (see --list-scenarios)")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print every registered arch/scenario and exit")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--partitions", type=int, default=1,
+                    help="virtual partitions the request batch is spliced over")
+    ap.add_argument("--calib-gen", type=int, default=4,
+                    help="decode steps per partition in the calibration pass")
+    ap.add_argument("--fused-decode", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="scan-compile the greedy decode loop into one "
+                         "donated dispatch per sub-batch (default on)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the generated (batch, gen) token matrix as "
+                         ".npy — lets the determinism tests diff two runs "
+                         "(and fused vs unfused decode) bitwise")
+    # -- continuous-batching loop mode --------------------------------------
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="run the continuous-batching request loop over a "
+                         "synthetic Poisson arrival trace")
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="serve-loop row pool size (max concurrent requests)")
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="decode steps per fused dispatch (splice granularity)")
+    ap.add_argument("--bucket", type=int, default=1,
+                    help="admission groups padded to this multiple")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="number of requests in the synthetic trace")
+    ap.add_argument("--max-new", type=int, default=8,
+                    help="tokens generated per request in the loop")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load, requests/s (0 = --load x the "
+                         "calibrated service rate)")
+    ap.add_argument("--load", type=float, default=1.0,
+                    help="offered load as a fraction of the calibrated "
+                         "service rate (used when --rate is 0)")
+    ap.add_argument("--clock", default="virtual", choices=["virtual", "wall"],
+                    help="virtual = deterministic report-priced clock")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="time-to-first-token budget, seconds")
+    ap.add_argument("--slo-tok", type=float, default=None,
+                    help="per-decode-step budget, seconds")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the per-request SLO trace as JSON")
+    ap.add_argument("--bench-out", default=None,
+                    help="write the run summary as JSON")
+    args = ap.parse_args()
+
+    if args.list_scenarios:
+        from repro.configs.registry import format_listing
+
+        print(format_listing())
+        return
+    if not args.arch:
+        ap.error("--arch is required (or --list-scenarios to enumerate)")
+    if args.serve_loop:
+        run_loop(args)
+    else:
+        run_oneshot(args)
 
 
 if __name__ == "__main__":

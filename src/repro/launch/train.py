@@ -41,17 +41,18 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.configs.registry import format_listing, resolve_arch
 from repro.configs.shapes import SHAPES, ShapeSpec, smoke_config
 from repro.data import make_batch
 from repro.launch.mesh import debug_mesh, make_production_mesh
-from repro.models.zoo import LM, get_config
+from repro.models.zoo import LM
 from repro.optim import OptConfig, init_opt_state
 from repro.parallel.steps import accum_layout, make_shardings, make_train_step
 from repro.runtime import FailureInjector, NestedPartitionExecutor, TrainSupervisor
 
 
 def build(args):
-    cfg = get_config(args.arch)
+    cfg = resolve_arch(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
         shape = ShapeSpec("smoke", seq_len=args.seq_len, global_batch=args.batch, kind="train")
@@ -106,7 +107,9 @@ def build(args):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="model arch id (see --list-scenarios)")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print every registered arch/scenario and exit")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--smoke", action="store_true", help="reduced config on local devices")
@@ -129,6 +132,12 @@ def main():
     ap.add_argument("--metrics-out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        print(format_listing())
+        return
+    if not args.arch:
+        ap.error("--arch is required (or --list-scenarios to enumerate)")
 
     N = max(1, args.fused_steps)
     if args.steps % N:

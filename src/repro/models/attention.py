@@ -258,7 +258,7 @@ def decode_attention(
     q: jnp.ndarray,  # (B, Hq, 1, D)
     k_cache: jnp.ndarray,  # (B, Hkv, C, D)  C = cache capacity
     v_cache: jnp.ndarray,
-    cache_len: jnp.ndarray,  # scalar int32: #tokens written so far
+    cache_len: jnp.ndarray,  # int32: #tokens written so far — scalar or (B,)
     *,
     window: Optional[int] = None,
     rolling: bool = False,
@@ -270,6 +270,12 @@ def decode_attention(
     With ``rolling=True`` the cache is a circular buffer of capacity C
     (== window for SWA): once cache_len >= C every slot is valid, and
     ordering does not matter for softmax(QK)V.
+
+    ``cache_len`` may be a per-row ``(B,)`` vector (continuous-batching
+    serving: rows admitted at different times sit at different positions).
+    Every op here is row-independent — batched einsums contract over
+    non-batch dims and the slot mask broadcasts per row — so a row at
+    length L computes bitwise what the scalar path computes at length L.
     """
     B, Hq, _, D = q.shape
     Hkv, C = k_cache.shape[1], k_cache.shape[2]
@@ -289,6 +295,8 @@ def decode_attention(
         s = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache).astype(jnp.float32) * scale
     slots = jnp.arange(C)[None, None, None, :]
     clen = jnp.asarray(cache_len)
+    if clen.ndim:  # per-row lengths -> broadcast over (B, H, q, slot)
+        clen = clen[:, None, None, None]
     valid = slots < jnp.minimum(clen, C)
     if window is not None and not rolling:
         valid = valid & (slots >= clen - window)
@@ -305,12 +313,19 @@ def update_cache(
     v_cache: jnp.ndarray,
     k_new: jnp.ndarray,  # (B, Hkv, 1, D)
     v_new: jnp.ndarray,
-    cache_len,  # scalar int32: tokens already in cache
+    cache_len,  # int32 tokens already in cache: scalar or per-row (B,)
     rolling: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     C = k_cache.shape[2]
     pos = jnp.asarray(cache_len) % C if rolling else jnp.asarray(cache_len)
     pos = pos.astype(jnp.int32)
+    if pos.ndim:
+        # per-row write slots (continuous batching): one-slot scatter per
+        # row — writes the exact same k/v values the scalar slice path does
+        rows = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[rows, :, pos, :].set(k_new[:, :, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, :, pos, :].set(v_new[:, :, 0].astype(v_cache.dtype))
+        return k_cache, v_cache
     z = jnp.zeros((), jnp.int32)
     k_cache = lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (z, z, pos, z))
     v_cache = lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (z, z, pos, z))

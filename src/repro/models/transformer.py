@@ -181,7 +181,7 @@ def attn_decode(
     x_t,  # (B, d)
     kcache,
     vcache,  # (B, G', C, hd)
-    cache_len,  # scalar int32
+    cache_len,  # int32: scalar, or per-row (B,) under continuous batching
     cfg: ModelConfig,
     plan: HeadShardingPlan,
     *,
@@ -191,7 +191,8 @@ def attn_decode(
     B = x_t.shape[0]
     hd = cfg.head_dim_
     rolling = window is not None and kcache.shape[2] == window
-    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    clen = jnp.asarray(cache_len, jnp.int32)
+    pos = jnp.broadcast_to(clen[:, None] if clen.ndim else clen, (B, 1))
     q, k, v = _qkv(p, x_t[:, None, :], cfg, plan, pos, inv_freq)
     kcache, vcache = update_cache(kcache, vcache, k, v, cache_len, rolling=rolling)
     kv_map = plan.q_to_kv if plan.kv_replicated else None

@@ -304,7 +304,13 @@ class LM:
         return logits, cache
 
     def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-        """One decoding step. tokens: (B,) int32. Returns (logits (B, V'), cache)."""
+        """One decoding step. tokens: (B,) int32. Returns (logits (B, V'), cache).
+
+        ``cache["len"]`` may be a scalar (classic one-shot batch) or a
+        per-row ``(B,)`` vector — the continuous-batching serving loop
+        (``repro.runtime.serving``) keeps rows at different sequence
+        positions in one batch; each row's computation is independent, so
+        a row at length L matches the scalar-length path bitwise."""
         cfg = self.cfg
         adt = cfg.activation_dtype
         x = jnp.take(params["embed"].astype(adt), tokens, axis=0)  # (B, d)

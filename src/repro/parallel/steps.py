@@ -225,7 +225,20 @@ def make_prefill_step(lm: LM, sh: StepShardings) -> Callable:
     return prefill_step
 
 
-def make_serve_step(lm: LM, sh: StepShardings) -> Callable:
+def make_serve_step(lm: LM, sh: StepShardings, *, masked: bool = False) -> Callable:
+    """Greedy decode step.  ``masked=False`` is the classic one-shot batch
+    step ``(params, cache, tokens) -> (next_tok, cache)``.
+
+    ``masked=True`` is the continuous-batching variant the serving loop
+    (``repro.runtime.serving``) drives: ``(params, cache, tokens, active)``
+    where ``active`` is a per-row bool compaction/refill mask.  Inactive
+    rows (finished / not-yet-refilled slots) hold their token and their
+    per-row cache position (``cache["len"]``, a ``(B,)`` vector) frozen, so
+    a freed row idles in place until a newly admitted request's prefill
+    cache is spliced over it.  Active rows run the exact same arithmetic as
+    the unmasked step — rows are computationally independent, which is what
+    makes a mid-loop splice bitwise-identical to a fresh batch.
+    """
     cfg = lm.cfg
 
     def serve_step(params, cache, tokens):
@@ -238,7 +251,18 @@ def make_serve_step(lm: LM, sh: StepShardings) -> Callable:
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, cache
 
-    return serve_step
+    if not masked:
+        return serve_step
+
+    def serve_step_masked(params, cache, tokens, active):
+        next_tok, new_cache = serve_step(params, cache, tokens)
+        next_tok = jnp.where(active, next_tok, tokens)
+        # inactive rows do not advance their cache position (their slot-len
+        # write above lands harmlessly and is fully overwritten on refill)
+        new_cache["len"] = jnp.where(active, new_cache["len"], cache["len"])
+        return next_tok, new_cache
+
+    return serve_step_masked
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,15 @@
+"""Runtime package: execution engines, the online executor, serving.
+
+``Engine`` is the one step-driver API every execution engine conforms to —
+``DGSolver`` (flat reference), ``PartitionedDG`` (SPMD slabs),
+``BlockedDGEngine`` (per-partition blocks) and ``SimulatedCluster``
+(heterogeneous nodes) each grew their own ``run(...)`` spelling across
+PRs 1–5; they now share this protocol (divergent keyword spellings keep a
+one-release deprecation shim).
+"""
+
+from typing import Any, Optional, Protocol, runtime_checkable
+
 from repro.runtime.executor import (
     BlockedDGEngine,
     CalibrationReport,
@@ -10,8 +22,50 @@ from repro.runtime.cluster import NodeProfile, SimulatedCluster, format_cluster_
 from repro.runtime.fault_tolerance import FailureInjector, StepTimer, TrainSupervisor
 from repro.runtime.pipeline import FusedStepPipeline, ShardedStepPipeline
 from repro.runtime.schedule import DispatchStats, StepSchedule
+from repro.runtime.serving import (
+    SLO,
+    ContinuousBatchingLoop,
+    ServeKernels,
+    ServeRequest,
+    ServeSummary,
+    build_lm,
+    calibrate_split,
+    decode_batch,
+    poisson_trace,
+)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """The unified step-driver API of the four execution engines.
+
+    * ``run(q, n_steps, dt=None, *, observe=False, fused=True) -> q`` —
+      advance the state.  ``fused`` drives the engine's single-dispatch
+      compiled path (scan over steps); ``fused=False`` is the eager
+      per-step reference.  ``observe`` feeds per-partition step seconds to
+      the engine's executor so the calibrate→solve→resplice loop runs
+      alongside the compute (engines without partition-resolved timing
+      attribute the synchronous wall time; the flat solver ignores it).
+    * ``calibrate(q, **kw) -> CalibrationReport`` — per-partition seconds
+      for the schedule phases, the planner's input.
+    * ``resplice(plan)`` — apply a solved :class:`Plan` (engines rebuild
+      their index tables through the executor's resplice hooks; the flat
+      solver treats it as a no-op).
+
+    The protocol is structural (``isinstance`` checks methods exist);
+    ``tests/test_serving.py`` runs the behavioural conformance suite.
+    """
+
+    def run(self, q: Any, n_steps: int, dt: Optional[float] = None, *,
+            observe: bool = False, fused: bool = True) -> Any: ...
+
+    def calibrate(self, q: Any, **kwargs) -> CalibrationReport: ...
+
+    def resplice(self, plan: Optional[Plan]) -> None: ...
+
 
 __all__ = [
+    "Engine",
     "BlockedDGEngine",
     "CalibrationReport",
     "FusedStepPipeline",
@@ -29,4 +83,13 @@ __all__ = [
     "FailureInjector",
     "StepTimer",
     "TrainSupervisor",
+    "SLO",
+    "ContinuousBatchingLoop",
+    "ServeKernels",
+    "ServeRequest",
+    "ServeSummary",
+    "build_lm",
+    "calibrate_split",
+    "decode_batch",
+    "poisson_trace",
 ]

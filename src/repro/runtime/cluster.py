@@ -219,6 +219,11 @@ class SimulatedCluster:
             self._fused_engine = BlockedDGEngine(self.solver, self.executor)
         return self._fused_engine.pipeline(groups=self.profile_groups())
 
+    def resplice(self, plan) -> None:
+        """Apply a solved plan: every node engine rebuilds its own block
+        through the executor's resplice hooks."""
+        self.executor.apply(plan)
+
     def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False,
             fused: bool = True):
         """LSRK4(5) on the cluster rhs.

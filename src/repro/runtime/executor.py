@@ -363,6 +363,14 @@ class NestedPartitionExecutor:
 
     # -- test / simulation hooks -------------------------------------------
 
+    @property
+    def straggler_factors(self) -> np.ndarray:
+        """Current per-partition straggler multipliers (a copy; see
+        ``inject_straggler``).  Consumers pricing decisions off a
+        calibration report — e.g. the serving loop's admission control —
+        read these so an injected straggler reprices immediately."""
+        return self._factors.copy()
+
     def inject_straggler(self, partition: int, factor: float) -> None:
         """Multiply partition's observed times by ``factor`` (test hook)."""
         self._factors[partition] = float(factor)
@@ -835,6 +843,12 @@ class BlockedDGEngine:
 
             cache[key] = FusedStepPipeline(self, groups=groups)
         return cache[key]
+
+    def resplice(self, plan) -> None:
+        """Apply a solved plan: the executor installs the new counts and the
+        resplice hooks rebuild this engine's block tables (jit caches are
+        hit whenever the padded block sizes have been seen before)."""
+        self.executor.apply(plan)
 
     def run(self, q, n_steps: int, dt: Optional[float] = None, observe: bool = False,
             fused: bool = True):

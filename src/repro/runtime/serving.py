@@ -1,0 +1,838 @@
+"""Continuous-batching serve loop on the nested-partition runtime.
+
+``launch/serve.py`` used to be one-shot: splice a batch, decode, exit —
+devices idle between batches and a late request waits for the next launch,
+which is exactly the idling the paper's nested schedule exists to kill.
+This module turns serving into a *loop* that keeps the fused-decode scan hot
+under a stream of arrivals:
+
+  * **One compiled decode program.**  The loop owns a fixed-capacity
+    ``(B,)`` row pool; decode advances all rows together in chunks of
+    ``chunk`` greedy steps, each chunk ONE ``lax.scan``-compiled, cache-
+    donating dispatch (``ServeKernels.decode_chunk``).  Splice points only
+    ever happen at chunk boundaries, and admission groups are padded to
+    ``bucket`` multiples, so the jit signature set stays tiny and stable —
+    the serving-side twin of the blocked engine's bucketed resplice.
+
+  * **Continuous batching.**  Finished rows are freed at the next chunk
+    boundary and refilled by splicing a newly admitted request's prefill
+    cache over the dead row (``cache["len"]`` is a per-row vector, so rows
+    at different sequence positions coexist in one batch).  Every batched
+    decode op is row-independent, which makes a mid-loop splice produce the
+    bitwise-identical token row the same request gets in a fresh one-shot
+    batch — ``tests/test_serving.py`` asserts this exactly.
+
+  * **Calibrated admission control.**  A calibration pass times prefill
+    (boundary phase) and decode (interior phase) into the same
+    ``CalibrationReport`` → ``plan_from_report`` path the DG engines use;
+    the report's per-partition time models — scaled by the executor's
+    straggler factors — price every scheduling decision.  The admissible
+    row count is the largest ``m`` whose waterfilled (``solve_multiway``)
+    makespan fits the chunk SLO budget.
+
+  * **SLO accounting + load shedding.**  Each request carries
+    arrival → admission → first-token → completion timestamps and deadline
+    flags.  A request whose modeled time-to-first-token can no longer meet
+    the SLO is shed; one whose completion no longer fits the latency budget
+    is downgraded (its ``max_new`` trimmed) or shed if even the minimum
+    would miss.
+
+The loop runs on a wall clock or — default, and what CI uses — a
+deterministic **virtual clock** priced entirely from the calibration
+report, so SLO/shedding behaviour is reproducible and host-speed
+independent.  The bitwise-splice guarantee assumes rows are computationally
+independent, which holds for every dense arch in the zoo (capacity-dropping
+MoE routing could in principle couple rows; serve smoke tests use dense
+models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import deque
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.load_balance import solve_multiway
+from repro.runtime.executor import NestedPartitionExecutor, pad_to_bucket
+from repro.runtime.schedule import CalibrationReport, DispatchStats
+
+__all__ = [
+    "SLO",
+    "ServeKernels",
+    "ServeRequest",
+    "ServeSummary",
+    "ContinuousBatchingLoop",
+    "build_lm",
+    "calibrate_split",
+    "decode_batch",
+    "poisson_trace",
+]
+
+
+# ---------------------------------------------------------------------------
+# Library extracted from the old launch/serve.py main() — the CLI is now
+# argument parsing over these, and the loop + tests call them directly.
+# ---------------------------------------------------------------------------
+
+
+def build_lm(arch: str, *, smoke: bool = True, mesh: str = "single", seed: int = 0):
+    """Resolve an arch (through the scenario registry), build + init the LM.
+
+    Returns ``(cfg, lm, params, mesh)``.  Encoder-only archs are rejected —
+    there is nothing to decode.
+    """
+    import jax
+
+    from repro.configs.registry import resolve_arch
+    from repro.configs.shapes import smoke_config
+    from repro.launch.mesh import debug_mesh, make_production_mesh
+    from repro.models.zoo import LM
+
+    cfg = resolve_arch(arch)
+    if cfg.is_encoder_only:
+        raise ValueError(f"{cfg.arch_id} is encoder-only: no decode serving")
+    if smoke:
+        cfg = smoke_config(cfg)
+        mesh_obj = debug_mesh()
+    else:
+        mesh_obj = make_production_mesh(multi_pod=(mesh == "multi"))
+    ep = max(1, min(cfg.n_experts, mesh_obj.shape["data"])) if cfg.n_experts else 1
+    lm = LM(cfg, ep_size=ep)
+    params = lm.init(jax.random.PRNGKey(seed))
+    return cfg, lm, params, mesh_obj
+
+
+class ServeKernels:
+    """The compiled serving programs for one ``(lm, mesh, max_len)``:
+
+      * ``prefill_rows`` — jitted prefill + greedy first token;
+      * ``decode_scan``  — the one-shot fused generation (n steps, ONE
+        donated dispatch), as the old serve CLI compiled it;
+      * ``decode_chunk`` — the masked continuous-batching variant the loop
+        drives (inactive rows hold token + per-row cache position frozen);
+      * ``splice_rows``  — overwrite freed rows with a freshly prefilled
+        request's cache (one fused dispatch per admission group).
+
+    ``max_len`` is the cache capacity every program is built against; the
+    loop and the one-shot reference must share it for the bitwise-splice
+    guarantee (cache capacity is part of the jit signature, not the math,
+    but sharing it removes any doubt).
+    """
+
+    def __init__(self, lm, mesh, max_len: int):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.parallel.steps import make_serve_step, make_shardings
+
+        self.lm = lm
+        self.cfg = lm.cfg
+        self.mesh = mesh
+        self.max_len = int(max_len)
+        self.stats = DispatchStats()  # fused decode dispatches (scan + chunk)
+        self.warmed: set = set()
+
+        sh = make_shardings(lm, mesh, kind="decode", batch_shardable=False)
+        raw_step = make_serve_step(lm, sh)
+        raw_masked = make_serve_step(lm, sh, masked=True)
+        vocab = self.cfg.vocab_size
+
+        self.serve_step = jax.jit(raw_step, donate_argnums=(1,))
+        self._prefill = jax.jit(lambda p, b: lm.prefill(p, b, max_len=self.max_len))
+
+        def first_token(logits):
+            logits = jnp.where(jnp.arange(logits.shape[-1]) < vocab, logits, -jnp.inf)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        self._first_token = jax.jit(first_token)
+
+        @partial(jax.jit, static_argnums=(2,), donate_argnums=(1,))
+        def decode_scan(p, carry, n):
+            """n greedy steps as ONE program: lax.scan with the (cache, tok)
+            carry donated.  The final cache is returned so every donated
+            leaf aliases an output."""
+
+            def body(carry, _):
+                cache, tok = carry
+                tok, cache = raw_step(p, cache, tok)
+                return (cache, tok), tok
+
+            (cache, tok), toks = jax.lax.scan(body, carry, None, length=n)
+            return toks, tok, cache
+
+        self.decode_scan = decode_scan
+
+        @partial(jax.jit, static_argnums=(3,), donate_argnums=(1,))
+        def decode_chunk(p, carry, active, n):
+            """The loop's hot program: n masked greedy steps, one dispatch."""
+
+            def body(carry, _):
+                cache, tok = carry
+                tok, cache = raw_masked(p, cache, tok, active)
+                return (cache, tok), tok
+
+            (cache, tok), toks = jax.lax.scan(body, carry, None, length=n)
+            return toks, tok, cache
+
+        self.decode_chunk = decode_chunk
+
+        @partial(jax.jit, donate_argnums=(0, 1, 2))
+        def splice_rows(cache, tok, active, new_cache, new_tok, idx):
+            """Overwrite rows ``idx`` of the loop state with the freshly
+            prefilled ``new_cache``/``new_tok``.  ``idx`` may repeat its
+            last entry (bucket padding) — duplicate writes carry identical
+            values, so the scatter is deterministic.  Segment cache leaves
+            are layer-major ``(Lseg, B, ...)`` — batch is axis 1; ``len``
+            is the per-row ``(B,)`` position vector."""
+            new_len = jnp.broadcast_to(
+                jnp.asarray(new_cache["len"], jnp.int32), idx.shape
+            )
+            out = {"len": cache["len"].at[idx].set(new_len)}
+            for key in cache:
+                if key == "len":
+                    continue
+                out[key] = jax.tree.map(
+                    lambda a, b: a.at[:, idx].set(b.astype(a.dtype)),
+                    cache[key],
+                    new_cache[key],
+                )
+            tok = tok.at[idx].set(new_tok)
+            active = active.at[idx].set(True)
+            return out, tok, active
+
+        self.splice_rows = splice_rows
+
+    def prefill_rows(self, params, rows: np.ndarray):
+        """Prefill a (b, S) int32 prompt block; returns (first_tok, cache)."""
+        import jax.numpy as jnp
+
+        logits, cache = self._prefill(params, {"tokens": jnp.asarray(rows)})
+        return self._first_token(logits), cache
+
+    def empty_state(self, params, capacity: int, prompt_len: int):
+        """Zero loop state (cache, tok, active) for ``capacity`` rows,
+        shaped via ``eval_shape`` (no throwaway prefill execution).  The
+        per-row ``len`` vector starts at 0; rows are refilled by splice
+        before they are ever read."""
+        import jax
+        import jax.numpy as jnp
+
+        spec = jax.ShapeDtypeStruct((capacity, prompt_len), jnp.int32)
+        _, cache_shape = jax.eval_shape(
+            lambda p, b: self.lm.prefill(p, b, max_len=self.max_len),
+            params,
+            {"tokens": spec},
+        )
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_shape)
+        cache["len"] = jnp.zeros((capacity,), jnp.int32)
+        tok = jnp.zeros((capacity,), jnp.int32)
+        active = jnp.zeros((capacity,), bool)
+        return cache, tok, active
+
+
+def decode_batch(
+    kernels: ServeKernels,
+    params,
+    rows: np.ndarray,
+    n_gen: int,
+    *,
+    fused: bool = True,
+):
+    """One-shot serve of a (b, S) prompt block: prefill + ``n_gen`` greedy
+    tokens.  Returns ``(gen (b, n_gen) np.int32, prefill_s, decode_s)``.
+
+    This is the old CLI's inner loop as a library function — and the
+    reference the continuous-batching bitwise test compares against.
+    """
+    import jax
+
+    t0 = time.time()
+    tok, cache = kernels.prefill_rows(params, rows)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+    out = [np.asarray(tok)]
+    t1 = time.time()
+    if fused and n_gen > 1:
+        toks, tok, _ = kernels.decode_scan(params, (cache, tok), n_gen - 1)
+        jax.block_until_ready(toks)
+        kernels.stats.record(1, n_gen - 1)
+        out.extend(np.asarray(toks))
+    else:
+        for _ in range(n_gen - 1):
+            tok, cache = kernels.serve_step(params, cache, tok)
+            kernels.stats.record(1, 1)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+    return np.stack(out, axis=1), t_prefill, time.time() - t1
+
+
+def warm_batch(kernels: ServeKernels, params, rows: np.ndarray, n_gen: int, *, fused: bool = True):
+    """Compile (and warm jit's dispatch cache for) one sub-batch shape.
+    Fused scans bake the length into the program, so warming executes one
+    throwaway generation per distinct (rows, n) shape — the timed pass
+    stays compile-free."""
+    key = (len(rows), n_gen if fused else 3, fused)
+    if len(rows) and key not in kernels.warmed:
+        decode_batch(kernels, params, rows, n_gen if fused else 3, fused=fused)
+        kernels.warmed.add(key)
+
+
+def calibrate_split(
+    kernels: ServeKernels,
+    params,
+    prompts: np.ndarray,
+    partitions: int,
+    *,
+    calib_gen: int = 4,
+    executor: Optional[NestedPartitionExecutor] = None,
+    fused: bool = True,
+):
+    """Calibration pass over ``partitions`` virtual partitions of a prompt
+    batch: time each partition's prefill (boundary phase — per-request
+    setup) and decode (interior phase), build the ``CalibrationReport``,
+    and re-solve the row split through the executor's ``plan_from_report``
+    — the same report→plan path the DG engines run online.
+
+    Returns ``(executor, report)`` with the calibrated counts applied.
+    """
+    P = max(1, min(int(partitions), len(prompts)))
+    if executor is None:
+        executor = NestedPartitionExecutor(len(prompts), P, bucket=1, smoothing=1.0)
+    n = max(2, int(calib_gen))
+    offs = executor.offsets
+    t_prefill = np.zeros(P)
+    t_decode = np.zeros(P)
+    for p in range(P):
+        rows = prompts[offs[p] : offs[p + 1]]
+        if len(rows) == 0:
+            continue
+        warm_batch(kernels, params, rows, n, fused=fused)
+        _, tp, td = decode_batch(kernels, params, rows, n, fused=fused)
+        t_prefill[p], t_decode[p] = tp, td
+    report = CalibrationReport(
+        boundary_s=t_prefill, interior_s=t_decode, transfer_s=np.zeros(P)
+    )
+    executor.observe(report.step_s)
+    executor.plan_from_report(report)
+    return executor, report
+
+
+# ---------------------------------------------------------------------------
+# Requests, SLOs, clocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One request and its full SLO ledger (all timestamps in loop seconds,
+    wall or virtual depending on the clock the loop runs)."""
+
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    arrival_s: float = 0.0
+
+    # -- lifecycle, filled in by the loop ----------------------------------
+    state: str = "queued"  # queued | active | done | shed
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    shed_s: Optional[float] = None
+    max_new_eff: Optional[int] = None  # post-downgrade generation budget
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.done_s is None:
+            return None
+        return self.done_s - self.arrival_s
+
+    @property
+    def downgraded(self) -> bool:
+        return self.max_new_eff is not None and self.max_new_eff < self.max_new
+
+    def record(self, slo: "SLO") -> Dict[str, Any]:
+        """JSON-able trace row, deadline flags evaluated against ``slo``."""
+        ttft, lat = self.ttft_s, self.latency_s
+        return {
+            "rid": self.rid,
+            "state": self.state,
+            "arrival_s": self.arrival_s,
+            "admitted_s": self.admitted_s,
+            "first_token_s": self.first_token_s,
+            "done_s": self.done_s,
+            "shed_s": self.shed_s,
+            "ttft_s": ttft,
+            "latency_s": lat,
+            "n_tokens": len(self.tokens),
+            "max_new": self.max_new,
+            "max_new_eff": self.max_new_eff,
+            "downgraded": self.downgraded,
+            "ttft_miss": bool(ttft is not None and ttft > slo.ttft_s),
+            "deadline_miss": bool(
+                lat is not None
+                and np.isfinite(slo.latency_s)
+                and lat > slo.latency_s
+            ),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Service-level objectives the admission/shedding policy enforces.
+
+    ``ttft_s``    — arrival→first-token budget; a request whose *modeled*
+                    TTFT already exceeds it is shed at admission time.
+    ``tok_s``     — per-decode-step budget; the admissible row count is the
+                    largest m whose waterfilled chunk makespan fits
+                    ``chunk * tok_s``.
+    ``latency_s`` — arrival→completion budget (inf disables downgrades): a
+                    request whose full generation no longer fits is trimmed
+                    to what does.
+    ``min_new``   — floor below which a downgrade becomes a shed.
+    """
+
+    ttft_s: float = 1.0
+    tok_s: float = 0.05
+    latency_s: float = float("inf")
+    min_new: int = 1
+
+
+class VirtualClock:
+    """Deterministic loop clock priced from the calibration report: decode
+    chunks and prefills advance it by their *modeled* seconds, so SLO and
+    shedding behaviour is reproducible and host-speed independent."""
+
+    def __init__(self):
+        self._now = 0.0
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> None:
+        self._now += max(0.0, float(dt))
+
+    def wait_until(self, t: float) -> None:
+        self._now = max(self._now, float(t))
+
+
+class WallClock:
+    """Real time.  ``advance`` is a no-op (work itself consumes time);
+    idle waits sleep until the next arrival."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def advance(self, dt: float) -> None:  # work already took the time
+        pass
+
+    def wait_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+
+def poisson_trace(
+    n_requests: int,
+    rate_rps: float,
+    *,
+    prompt_len: int,
+    vocab: int,
+    max_new: int,
+    seed: int = 0,
+) -> List[ServeRequest]:
+    """Synthetic Poisson arrival trace.  A fixed seed draws one set of
+    exponential gaps that the rate only rescales, so raising the offered
+    load strictly compresses the same arrival pattern — which is what makes
+    the shed-rate-vs-load curve monotone and testable."""
+    g = np.random.default_rng(seed)
+    gaps = g.exponential(1.0, n_requests) / float(rate_rps)
+    arrivals = np.cumsum(gaps)
+    prompts = g.integers(0, vocab, (n_requests, prompt_len), dtype=np.int32)
+    return [
+        ServeRequest(
+            rid=i,
+            prompt=prompts[i],
+            max_new=int(max_new),
+            arrival_s=float(arrivals[i]),
+        )
+        for i in range(n_requests)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# The loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeSummary:
+    n_requests: int
+    n_done: int
+    n_shed: int
+    n_downgraded: int
+    shed_rate: float
+    throughput_tok_s: float
+    ttft_p50_s: float
+    ttft_p99_s: float
+    latency_p50_s: float
+    ttft_miss_rate: float
+    elapsed_s: float
+    n_chunks: int
+    dispatches_per_chunk: float
+    total_tokens: int
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class ContinuousBatchingLoop:
+    """Request-queue serving loop over a fixed row pool (see module doc).
+
+    Parameters
+    ----------
+    kernels, params : the compiled serving programs and model weights.
+    capacity        : row-pool size B (max concurrent requests).
+    chunk           : decode steps per fused dispatch; splice points and
+                      admissions happen only at chunk boundaries.
+    partitions      : virtual partitions for calibration/pricing (the
+                      admission solver waterfills rows over them).
+    bucket          : admission groups are padded to multiples of this, so
+                      prefill jit signatures stay a small fixed set.
+    slo             : admission/shedding budgets; ``None`` derives a
+                      generous default (3x the calibrated full-pool cost)
+                      after calibration.
+    report/executor : inject a pre-built calibration (tests do, for full
+                      determinism); otherwise ``run`` calibrates on the
+                      first ``capacity`` trace prompts.
+    clock           : "virtual" (deterministic, report-priced — default)
+                      or "wall".
+    """
+
+    def __init__(
+        self,
+        kernels: ServeKernels,
+        params,
+        *,
+        capacity: int = 4,
+        chunk: int = 8,
+        partitions: int = 1,
+        bucket: int = 1,
+        calib_gen: int = 4,
+        slo: Optional[SLO] = None,
+        report: Optional[CalibrationReport] = None,
+        executor: Optional[NestedPartitionExecutor] = None,
+        clock: str = "virtual",
+    ):
+        self.kernels = kernels
+        self.params = params
+        self.capacity = int(capacity)
+        self.chunk = max(1, int(chunk))
+        self.partitions = max(1, min(int(partitions), self.capacity))
+        self.bucket = max(1, int(bucket))
+        self.calib_gen = max(2, int(calib_gen))
+        self.slo = slo
+        self.report = report
+        self.executor = executor
+        self.clock_kind = clock
+        self.stats = DispatchStats()  # decode-chunk dispatches only
+        self.n_chunks = 0
+        self.aux_dispatches = 0  # prefill + splice dispatches (not the scan)
+        self.requests: List[ServeRequest] = []
+        self._calib_counts: Optional[np.ndarray] = None
+        self._calib_steps = 1
+
+        if self.report is not None:
+            # injected report: observe + plan exactly like the measured
+            # path so pricing and counts line up
+            if self.executor is None:
+                self.executor = NestedPartitionExecutor(
+                    self.capacity, self.partitions, bucket=1, smoothing=1.0
+                )
+            self._adopt_report(self.report)
+
+    # -- calibration / pricing ---------------------------------------------
+
+    def _adopt_report(self, report: CalibrationReport) -> None:
+        self._calib_counts = np.maximum(self.executor.counts.astype(np.float64), 1.0)
+        self._calib_steps = max(1, self.calib_gen - 1)
+        self.executor.observe(report.step_s)
+        self.executor.plan_from_report(report)
+        self.report = report
+        if self.slo is None:
+            full_chunk = self.modeled_chunk_seconds(self.capacity)
+            self.slo = SLO(
+                tok_s=3.0 * full_chunk / self.chunk,
+                ttft_s=3.0 * (self.modeled_prefill_seconds(self.capacity) + full_chunk),
+            )
+
+    def _ensure_calibrated(self, trace: Sequence[ServeRequest]) -> None:
+        if self.report is not None and self._calib_counts is not None:
+            return
+        prompts = np.stack(
+            [trace[i % len(trace)].prompt for i in range(self.capacity)]
+        )
+        self.executor = NestedPartitionExecutor(
+            self.capacity, self.partitions, bucket=1, smoothing=1.0
+        )
+        self._calib_counts = np.maximum(self.executor.counts.astype(np.float64), 1.0)
+        self._calib_steps = max(1, self.calib_gen - 1)
+        offs = self.executor.offsets
+        P = self.partitions
+        t_prefill, t_decode = np.zeros(P), np.zeros(P)
+        for p in range(P):
+            rows = prompts[offs[p] : offs[p + 1]]
+            if len(rows) == 0:
+                continue
+            warm_batch(self.kernels, self.params, rows, self.calib_gen)
+            _, tp, td = decode_batch(self.kernels, self.params, rows, self.calib_gen)
+            t_prefill[p], t_decode[p] = tp, td
+        self._adopt_report(
+            CalibrationReport(
+                boundary_s=t_prefill, interior_s=t_decode, transfer_s=np.zeros(P)
+            )
+        )
+
+    def _decode_models(self) -> List[Callable[[float], float]]:
+        """Per-partition t_p(k): modeled seconds for ONE decode step of k
+        rows, linear in the calibrated per-row rate, scaled by the
+        executor's live straggler factors (so an injected straggler
+        immediately reprices admission)."""
+        interior = np.asarray(self.report.interior_s, dtype=np.float64)
+        factors = self.executor.straggler_factors
+        steps, counts = self._calib_steps, self._calib_counts
+        return [
+            lambda k, p=p: float(
+                interior[p] / steps * (k / counts[p]) * factors[p]
+            )
+            for p in range(len(counts))
+        ]
+
+    def modeled_chunk_seconds(self, m: int) -> float:
+        """Waterfilled makespan of one ``chunk`` with m admitted rows."""
+        if m <= 0:
+            return 0.0
+        fns = self._decode_models()
+        if len(fns) == 1:
+            return fns[0](m) * self.chunk
+        return solve_multiway(fns, int(m)).makespan * self.chunk
+
+    def modeled_prefill_seconds(self, nb: int) -> float:
+        boundary = np.asarray(self.report.boundary_s, dtype=np.float64)
+        factors = self.executor.straggler_factors
+        per_row = float(np.mean(boundary / self._calib_counts * factors))
+        return per_row * max(0, int(nb))
+
+    def admissible_rows(self) -> int:
+        """Largest m (≤ capacity) whose modeled chunk makespan fits the
+        chunk SLO budget — floored at 1 so the loop always progresses."""
+        budget = self.chunk * self.slo.tok_s
+        m = self.capacity
+        while m > 1 and self.modeled_chunk_seconds(m) > budget:
+            m -= 1
+        return m
+
+    def service_rate_rps(self, max_new: int) -> float:
+        """Modeled steady-state request throughput at a full pool — the
+        reference point offered-load sweeps are expressed against."""
+        per_req = (
+            self.modeled_prefill_seconds(self.capacity) / self.capacity
+            + max_new * self.modeled_chunk_seconds(self.capacity) / self.chunk / self.capacity
+        )
+        return 1.0 / max(per_req, 1e-12)
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, trace: Sequence[ServeRequest], max_iters: int = 100_000) -> ServeSummary:
+        import jax
+        import jax.numpy as jnp
+
+        trace = sorted(trace, key=lambda r: (r.arrival_s, r.rid))
+        self.requests = list(trace)
+        if not trace:
+            return self._summarize(0.0)
+        S = len(trace[0].prompt)
+        if any(len(r.prompt) != S for r in trace):
+            raise ValueError("continuous batching expects equal prompt lengths")
+        if max(r.max_new for r in trace) + S > self.kernels.max_len:
+            raise ValueError(
+                f"max_len={self.kernels.max_len} < prompt_len+max_new; "
+                "rows would overflow their cache slots"
+            )
+        self._ensure_calibrated(trace)
+        clock = VirtualClock() if self.clock_kind == "virtual" else WallClock()
+
+        cache, tok, active = self.kernels.empty_state(self.params, self.capacity, S)
+        rows: List[Optional[ServeRequest]] = [None] * self.capacity
+        pending: deque = deque()
+        upcoming = deque(trace)
+        total_tokens = 0
+
+        for _ in range(max_iters):
+            now = clock.now()
+            while upcoming and upcoming[0].arrival_s <= now:
+                pending.append(upcoming.popleft())
+
+            n_active = sum(r is not None for r in rows)
+            if n_active == 0 and not pending:
+                if not upcoming:
+                    break
+                clock.wait_until(upcoming[0].arrival_s)
+                continue
+
+            # ---- admission: shed the hopeless, admit what fits ----------
+            m_star = self.admissible_rows()
+            free = [j for j in range(self.capacity) if rows[j] is None]
+            room = max(0, m_star - n_active)
+            if n_active == 0 and room == 0:
+                room = 1  # progress floor: an empty pool always serves
+            admit: List[ServeRequest] = []
+            still: deque = deque()
+            while pending:
+                req = pending.popleft()
+                wait = now - req.arrival_s
+                nb_next = pad_to_bucket(len(admit) + 1, self.bucket)
+                pred_ttft = wait + self.modeled_prefill_seconds(nb_next)
+                if pred_ttft > self.slo.ttft_s:
+                    req.state = "shed"
+                    req.shed_s = now
+                    continue
+                if len(admit) >= min(len(free), room):
+                    still.append(req)
+                    continue
+                # downgrade: trim the generation to what the latency
+                # budget still fits at the modeled per-step rate
+                req.max_new_eff = req.max_new
+                if np.isfinite(self.slo.latency_s):
+                    per_step = self.modeled_chunk_seconds(
+                        min(self.capacity, n_active + len(admit) + 1)
+                    ) / self.chunk
+                    left = (req.arrival_s + self.slo.latency_s) - (now + pred_ttft - wait)
+                    fit = 1 + int(max(0.0, left) / max(per_step, 1e-12))
+                    if fit < self.slo.min_new:
+                        req.state = "shed"
+                        req.shed_s = now
+                        continue
+                    req.max_new_eff = min(req.max_new, fit)
+                admit.append(req)
+            pending = still
+
+            # ---- prefill + splice the admitted group --------------------
+            if admit:
+                nb = len(admit)
+                pb = pad_to_bucket(nb, self.bucket)
+                block = np.stack(
+                    [admit[min(i, nb - 1)].prompt for i in range(pb)]
+                )
+                slots = [free[min(i, nb - 1)] for i in range(pb)]
+                tok_new, cache_new = self.kernels.prefill_rows(self.params, block)
+                self.aux_dispatches += 2  # prefill + splice
+                clock.advance(self.modeled_prefill_seconds(pb))
+                jax.block_until_ready(tok_new)
+                t_first = clock.now()
+                cache, tok, active = self.kernels.splice_rows(
+                    cache, tok, active, cache_new, tok_new,
+                    jnp.asarray(slots, jnp.int32),
+                )
+                tok_np = np.asarray(tok[jnp.asarray(slots[:nb], jnp.int32)])
+                for i, req in enumerate(admit):
+                    req.state = "active"
+                    req.admitted_s = now
+                    req.first_token_s = t_first
+                    req.tokens = [int(tok_np[i])]
+                    total_tokens += 1
+                    rows[free[i]] = req
+                    if req.max_new_eff is None:
+                        req.max_new_eff = req.max_new
+                    if len(req.tokens) >= req.max_new_eff:
+                        req.state = "done"
+                        req.done_s = t_first
+                        rows[free[i]] = None
+                        active = active.at[free[i]].set(False)
+
+            # ---- one fused decode chunk ---------------------------------
+            if any(r is not None for r in rows):
+                n_live = sum(r is not None for r in rows)
+                toks, tok, cache = self.kernels.decode_chunk(
+                    self.params, (cache, tok), active, self.chunk
+                )
+                self.stats.record(1, self.chunk)
+                self.kernels.stats.record(1, self.chunk)
+                self.n_chunks += 1
+                jax.block_until_ready(toks)
+                clock.advance(self.modeled_chunk_seconds(n_live))
+                t_end = clock.now()
+                toks_np = np.asarray(toks)  # (chunk, B)
+                dead = []
+                for j, req in enumerate(rows):
+                    if req is None:
+                        continue
+                    need = req.max_new_eff - len(req.tokens)
+                    take = min(need, self.chunk)
+                    req.tokens.extend(int(t) for t in toks_np[:take, j])
+                    total_tokens += take
+                    if len(req.tokens) >= req.max_new_eff:
+                        req.state = "done"
+                        req.done_s = t_end
+                        rows[j] = None
+                        dead.append(j)
+                if dead:
+                    active = active.at[jnp.asarray(dead, jnp.int32)].set(False)
+            elif not pending and not upcoming:
+                break
+        else:
+            raise RuntimeError(f"serving loop did not drain in {max_iters} iterations")
+
+        return self._summarize(clock.now(), total_tokens)
+
+    # -- reporting ---------------------------------------------------------
+
+    def _summarize(self, elapsed: float, total_tokens: int = 0) -> ServeSummary:
+        reqs = self.requests
+        done = [r for r in reqs if r.state == "done"]
+        shed = [r for r in reqs if r.state == "shed"]
+        ttfts = sorted(r.ttft_s for r in done if r.ttft_s is not None)
+        lats = sorted(r.latency_s for r in done if r.latency_s is not None)
+        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")
+        slo = self.slo or SLO()
+        return ServeSummary(
+            n_requests=len(reqs),
+            n_done=len(done),
+            n_shed=len(shed),
+            n_downgraded=sum(1 for r in reqs if r.downgraded),
+            shed_rate=len(shed) / max(1, len(reqs)),
+            throughput_tok_s=total_tokens / max(elapsed, 1e-12),
+            ttft_p50_s=pct(ttfts, 50),
+            ttft_p99_s=pct(ttfts, 99),
+            latency_p50_s=pct(lats, 50),
+            ttft_miss_rate=(
+                sum(1 for r in done if r.ttft_s is not None and r.ttft_s > slo.ttft_s)
+                / max(1, len(done))
+            ),
+            elapsed_s=elapsed,
+            n_chunks=self.n_chunks,
+            dispatches_per_chunk=self.stats.dispatches / max(1, self.n_chunks),
+            total_tokens=total_tokens,
+        )
+
+    def trace_records(self) -> List[Dict[str, Any]]:
+        slo = self.slo or SLO()
+        return [r.record(slo) for r in self.requests]
+
+    def write_trace(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.trace_records(), f, indent=1)
