@@ -44,6 +44,12 @@ def main() -> None:
     ap.add_argument("--overlap", choices=["on", "off", "both"], default="both",
                     help="fig5_3: modeled makespan with the boundary/interior "
                          "overlap schedule on/off (delta row when 'both')")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="fig4_1: path to a repro.kernels.autotune cache "
+                         "JSON; the Pallas kernel rows use its block-size "
+                         "winners (default: $REPRO_AUTOTUNE_CACHE / "
+                         "~/.cache/repro-dg/autotune.json, inline smoke "
+                         "sweep when absent)")
     ap.add_argument("--devices", type=int, default=1,
                     help="pipeline: add a sharded-fused row over this many "
                          "devices (needs XLA_FLAGS=--xla_force_host_platform_"
@@ -66,6 +72,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in picked:
         kwargs = {"smoke": args.smoke}
+        if name == "fig4_1":
+            kwargs["autotune_cache"] = args.autotune_cache
         if name == "fig5_3":
             kwargs["overlap"] = args.overlap
         if name == "pipeline":

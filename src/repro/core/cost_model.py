@@ -16,6 +16,15 @@ We reproduce that machinery in two layers:
   kernel shares; the K_MIC/K_CPU = 1.6 optimum; the 6.3x node speedup); the
   tables themselves were not published.  `calibrate()` builds a table from
   live measurements of this repo's JAX kernels.
+
+The measured path now also closes the loop with the kernel autotuner:
+`CalibrationTable.from_autotune` turns a `repro.kernels.autotune` cache
+entry (measured sec/element for the Pallas volume/flux kernels plus the
+fitted per-launch intercept) into a planner table, and
+`roofline_time_fn`'s per-step `overhead` default resolves from the same
+cache (`measured_launch_overhead`) when one is present, falling back to
+the historical 20 µs constant otherwise — so `solve_two_way` /
+`solve_hierarchical` plan on observed rooflines, not assumed ones.
 """
 
 from __future__ import annotations
@@ -114,10 +123,53 @@ def roofline_seconds(flops: float, bytes_moved: float, device: DeviceClass) -> f
     return max(flops / device.sustained_flops, bytes_moved / device.sustained_bandwidth)
 
 
-def roofline_time_fn(work: DGWorkModel, device: DeviceClass, overhead: float = 20e-6) -> Callable[[float], float]:
-    """T(K): seconds to advance K elements one timestep on ``device``."""
+DEFAULT_LAUNCH_OVERHEAD = 20e-6  # per-step launch/sync overhead fallback
+
+
+def measured_launch_overhead(
+    device_name: Optional[str] = None,
+    path: Optional[str] = None,
+    default: float = DEFAULT_LAUNCH_OVERHEAD,
+) -> float:
+    """The per-launch overhead measured by ``repro.kernels.autotune`` (the
+    intercept of its two-point t(K) fits), read from the autotune cache.
+
+    Prefers entries whose ``device_kind`` matches ``device_name``; with no
+    match (or no cache at all) falls back over all cached entries, then to
+    ``default`` — the historical 20 µs constant, pinned by a unit test."""
+    try:
+        from repro.kernels.autotune import load_cache
+
+        cache = load_cache(path)
+    except Exception:
+        return float(default)
+    entries = [e for e in cache.values() if isinstance(e, dict)
+               and "launch_overhead_s" in e]
+    if device_name is not None:
+        matched = [e for e in entries if e.get("device_kind") == device_name]
+        entries = matched or entries
+    vals = sorted(float(e["launch_overhead_s"]) for e in entries)
+    if not vals:
+        return float(default)
+    return vals[len(vals) // 2]
+
+
+def roofline_time_fn(
+    work: DGWorkModel,
+    device: DeviceClass,
+    overhead: Optional[float] = None,
+    autotune_path: Optional[str] = None,
+) -> Callable[[float], float]:
+    """T(K): seconds to advance K elements one timestep on ``device``.
+
+    ``overhead=None`` (the default) resolves the per-step launch overhead
+    from the autotune cache when one is present
+    (:func:`measured_launch_overhead`), keeping the 20 µs constant as the
+    no-cache fallback; pass an explicit float to bypass the lookup."""
     f = work.total_flops_per_element()
     b = work.total_bytes_per_element()
+    if overhead is None:
+        overhead = measured_launch_overhead(device.name, path=autotune_path)
 
     def T(K: float) -> float:
         K = max(0.0, float(K))
@@ -153,6 +205,33 @@ class CalibrationTable:
             return 0.0 if K == 0 else K * s + self.overhead
 
         return T
+
+    @staticmethod
+    def from_autotune(entry: Dict, fill_shares: bool = True) -> "CalibrationTable":
+        """A planner table from a ``repro.kernels.autotune`` cache entry.
+
+        The autotuner measures the two Pallas hot-spots (``volume_loop``,
+        ``int_flux``) and the per-launch intercept.  With ``fill_shares``
+        (default) the unmeasured kernels are filled in from the paper's
+        Fig 4.1 shares scaled so that ``volume_loop``'s share matches its
+        *measured* seconds — the same reconstruction ``stampede_calibration``
+        uses, but anchored to a measurement instead of the published wall
+        time.  The result plugs straight into ``NodeModel.from_tables`` /
+        ``solve_two_way``, which is how the measured roofline changes
+        planner decisions."""
+        measured = {k: float(v) for k, v in entry["sec_per_element"].items()}
+        sec = dict(measured)
+        if fill_shares and "volume_loop" in measured and measured["volume_loop"] > 0:
+            scale = measured["volume_loop"] / _FIG41_SHARES["volume_loop"]
+            for k, share in _FIG41_SHARES.items():
+                if k not in sec:
+                    sec[k] = share * scale
+        return CalibrationTable(
+            device_name=str(entry.get("device_kind", "autotuned")),
+            order=int(entry.get("order", 0)),
+            sec_per_element=sec,
+            overhead=float(entry.get("launch_overhead_s", DEFAULT_LAUNCH_OVERHEAD)),
+        )
 
 
 def calibrate(

@@ -184,6 +184,27 @@ class NodeModel:
     inter_transfer: Optional[Callable[[float], float]] = None
     K_accel_max: Optional[int] = None
 
+    @staticmethod
+    def from_tables(
+        host,
+        accel=None,
+        transfer: Optional[Callable[[float], float]] = None,
+        inter_transfer: Optional[Callable[[float], float]] = None,
+        K_accel_max: Optional[int] = None,
+    ) -> "NodeModel":
+        """A node model from measured ``CalibrationTable``s (e.g. the
+        autotuner's ``CalibrationTable.from_autotune`` output): host and
+        accel tables become the T_CPU / T_MIC callables via ``time_fn()``,
+        so the level-1/level-2 solves plan on observed per-element seconds
+        and launch overheads instead of the analytic roofline."""
+        return NodeModel(
+            t_host=host.time_fn(),
+            t_accel=None if accel is None else accel.time_fn(),
+            transfer=transfer,
+            inter_transfer=inter_transfer,
+            K_accel_max=K_accel_max,
+        )
+
     def solve(self, k: int, overlap: bool = False) -> SplitResult:
         """Best intra-node split of ``k`` elements (the level-2 solve)."""
         k = int(k)

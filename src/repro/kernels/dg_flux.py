@@ -17,19 +17,40 @@ Reached from the solver via the ``kernel_impl`` switch
 instantiation per face direction inside the solver's face loop, on the flat
 rhs, the SPMD slab interior, the blocked engine's correction phase, and the
 fused step pipeline (``runtime.pipeline``) alike.
+
+BF = 128 is the hand-derived default; ``repro.kernels.autotune`` sweeps it
+per device class and installs the measured winner via ``set_block_faces``
+(or per call via ``dg_flux_pallas(..., bf=...)``).  The kernel is pure
+per-face VPU work, so results are bitwise-invariant in BF.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-BF = 128  # faces per grid step
+BF = 128  # default faces per grid step
+
+# autotuned override (repro.kernels.autotune.activate): None = use BF.
+# Baked into programs at trace time — activate BEFORE building pipelines.
+_ACTIVE_BF: Optional[int] = None
+
+
+def set_block_faces(bf: Optional[int]) -> None:
+    """Install an autotuned faces-per-grid-step block size (None resets to
+    the default ``BF``).  Affects subsequent traces only."""
+    global _ACTIVE_BF
+    _ACTIVE_BF = None if bf is None else int(bf)
+
+
+def block_faces() -> int:
+    """The BF the next ``dg_flux_pallas`` trace will use."""
+    return BF if _ACTIVE_BF is None else _ACTIVE_BF
 
 # SYM[a][b]: 6-component slot of the symmetric (a,b) entry
 SYM = ((0, 5, 4), (5, 1, 3), (4, 3, 2))
@@ -84,7 +105,9 @@ def dg_flux_pallas(
     sign: float,
     *,
     interpret: bool = True,
+    bf: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    BF = block_faces() if bf is None else int(bf)
     F, _, M, _ = Sm.shape
     MM = M * M
     pad = (-F) % BF

@@ -21,22 +21,43 @@ derivative temporaries of the same size + D16 (64 KiB) ~= 0.9 MiB << 16 MiB.
 
 Validated against ``ref.dg_volume_ref`` in interpret mode (CPU) across
 orders/dtypes; the TPU (Mosaic) path is the deployment target.
+
+BE = 16 is the hand-derived default; ``repro.kernels.autotune`` sweeps it
+per device class and installs the measured winner via ``set_block_elems``
+(or per call via ``dg_volume_pallas(..., be=...)``).  The kernel is
+block-diagonal per element, so results are bitwise-invariant in BE.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-BE = 16  # elements per grid step -> 16*M = 128 MXU rows at M=8
+BE = 16  # default elements per grid step -> 16*M = 128 MXU rows at M=8
+
+# autotuned override (repro.kernels.autotune.activate): None = use BE.
+# Baked into programs at trace time — activate BEFORE building pipelines.
+_ACTIVE_BE: Optional[int] = None
 
 
-def _volume_kernel(q_ref, d16_ref, mat_ref, out_ref, *, M: int, metrics):
+def set_block_elems(be: Optional[int]) -> None:
+    """Install an autotuned elements-per-grid-step block size (None resets
+    to the default ``BE``).  Affects subsequent traces only."""
+    global _ACTIVE_BE
+    _ACTIVE_BE = None if be is None else int(be)
+
+
+def block_elems() -> int:
+    """The BE the next ``dg_volume_pallas`` trace will use."""
+    return BE if _ACTIVE_BE is None else _ACTIVE_BE
+
+
+def _volume_kernel(q_ref, d16_ref, mat_ref, out_ref, *, M: int, metrics, BE: int):
     """q_ref: (BE, 9, M, M, M); d16_ref: (BE*M, BE*M); mat_ref: (BE, 3) =
     (rho, lam, mu); out_ref: (BE, 9, M, M, M)."""
     cdt = jnp.result_type(q_ref.dtype, jnp.float32)
@@ -114,7 +135,9 @@ def dg_volume_pallas(
     mu: jnp.ndarray,
     *,
     interpret: bool = True,
+    be: Optional[int] = None,
 ) -> jnp.ndarray:
+    BE = block_elems() if be is None else int(be)
     K, F, M = q.shape[0], q.shape[1], q.shape[2]
     if K % BE:
         pad = BE - K % BE
@@ -129,7 +152,7 @@ def dg_volume_pallas(
     mats = jnp.stack([rho, lam, mu], axis=1).astype(q.dtype)
 
     out = pl.pallas_call(
-        functools.partial(_volume_kernel, M=M, metrics=tuple(float(m) for m in metrics)),
+        functools.partial(_volume_kernel, M=M, metrics=tuple(float(m) for m in metrics), BE=BE),
         grid=(Kp // BE,),
         in_specs=[
             pl.BlockSpec((BE, F, M, M, M), lambda i: (i, 0, 0, 0, 0)),

@@ -211,13 +211,18 @@ class SimulatedCluster:
             out[i] = keys.setdefault((p.name, p.speed), len(keys))
         return out
 
-    def fused_pipeline(self):
+    def fused_pipeline(self, layout: str = "envelope"):
         """The cluster's fused step driver: ONE donated scan-compiled
-        program covering every node's block (same-profile node groups
-        batched per group), rebuilt across resplices via the usual hooks."""
+        program covering every node's block, rebuilt across resplices via
+        the usual hooks.  The default envelope layout collapses ALL profile
+        groups into one volume + one surface launch per rhs (the per-node
+        simulated price rides the scan carry, independent of launch
+        grouping); ``layout="grouped"`` keeps one launch pair per profile
+        class (the differential reference)."""
         if self._fused_engine is None:
             self._fused_engine = BlockedDGEngine(self.solver, self.executor)
-        return self._fused_engine.pipeline(groups=self.profile_groups())
+        return self._fused_engine.pipeline(groups=self.profile_groups(),
+                                           layout=layout)
 
     def resplice(self, plan) -> None:
         """Apply a solved plan: every node engine rebuilds its own block

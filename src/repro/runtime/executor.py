@@ -826,22 +826,33 @@ class BlockedDGEngine:
             out = out.at[b["scat"]].set(r)
         return out[:K]
 
-    def pipeline(self, groups=None):
+    def pipeline(self, groups=None, layout: str = "envelope"):
         """The fused scan-compiled step pipeline bound to this engine
         (built lazily, invalidated and rebuilt across resplices).
 
+        The default ``layout="envelope"`` pads every block to a common
+        envelope so each rhs is exactly ONE volume + ONE surface kernel
+        launch regardless of the bucket split; ``layout="grouped"`` keeps
+        the per-bucket launch batching (the bitwise differential reference,
+        and the layout under which ``groups`` separates launches).
+
         ``groups`` (optional partition -> bucket-group map) keeps blocks of
-        different groups out of each other's batched launches — how a
-        ``SimulatedCluster`` fuses each same-profile node group separately;
-        one pipeline is cached per distinct grouping."""
-        key = None if groups is None else tuple(int(g) for g in groups)
+        different groups out of each other's batched launches under the
+        grouped layout — how a ``SimulatedCluster`` fuses each same-profile
+        node group separately; the envelope layout batches across groups by
+        design (its in-scan pricing is launch-grouping independent).  One
+        pipeline is cached per distinct (grouping, layout)."""
+        key = (
+            None if groups is None else tuple(int(g) for g in groups),
+            str(layout),
+        )
         cache = getattr(self, "_pipelines", None)
         if cache is None:
             cache = self._pipelines = {}
         if key not in cache:
             from repro.runtime.pipeline import FusedStepPipeline
 
-            cache[key] = FusedStepPipeline(self, groups=groups)
+            cache[key] = FusedStepPipeline(self, groups=groups, layout=layout)
         return cache[key]
 
     def resplice(self, plan) -> None:

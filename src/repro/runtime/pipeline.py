@@ -15,14 +15,26 @@ entire blocked time loop into ONE donated program:
   compiled program per bucket signature serves every horizon;
 * **scan over stages** — the five LSRK4(5) stages are the inner
   ``lax.scan`` of ``repro.dg.rk.lsrk45_step``, traced once;
-* **bucket batching** — blocks sharing a padded ``(ext, own)`` size (and
-  profile group, see below) are stacked and the block RHS is batched over
-  the stacked element axis, so P same-bucket partitions become ONE volume
-  launch and ONE surface launch instead of P of each.  The element axis is
-  the batch axis the kernels (XLA einsum and the Pallas
-  ``dg_volume_pallas`` / ``dg_flux_pallas`` grids alike) already tile over,
-  so stacking into it is both the fastest layout and arithmetically
-  identical per element;
+* **envelope batching** (default ``layout="envelope"``) — ALL blocks are
+  padded to a common envelope ``(env, env_own)`` = (max ext pad, max own
+  pad) and stacked, so the whole heterogeneous split becomes exactly ONE
+  volume launch and ONE surface launch per rhs no matter how many bucket
+  sizes or profile groups the partitioner produced.  Pad rows gather
+  ``q[0]`` with unit materials, carry ``nbr = -1`` sentinels (no real row
+  ever references them) and scatter to the dump row ``K``, so the masked
+  tail is arithmetically inert and the result stays bitwise identical to
+  the per-bucket path: the kernels are block-diagonal / per-row over the
+  element axis, so real rows see the exact same operands either way.  The
+  ledgered ``stats.kernel_launches`` counter (recorded at trace time)
+  asserts the one-launch property;
+* **bucket batching** (``layout="grouped"``, the differential reference) —
+  blocks sharing a padded ``(ext, own)`` size (and profile group, see
+  below) are stacked and the block RHS is batched over the stacked element
+  axis, so P same-bucket partitions become ONE volume launch and ONE
+  surface launch per *bucket*.  The element axis is the batch axis the
+  kernels (XLA einsum and the Pallas ``dg_volume_pallas`` /
+  ``dg_flux_pallas`` grids alike) already tile over, so stacking into it
+  is both the fastest layout and arithmetically identical per element;
 * **hoisted scatter target** — the ``(K+1, ...)`` dump-row target is built
   once per resplice (``BlockedDGEngine.rebuild``) and threaded through the
   program as an operand instead of being allocated per evaluation;
@@ -81,20 +93,32 @@ __all__ = ["FusedStepPipeline", "ShardedStepPipeline"]
 class FusedStepPipeline:
     """One engine's time loop as a single donated, scan-compiled program."""
 
-    def __init__(self, engine, groups=None):
+    def __init__(self, engine, groups=None, layout: str = "envelope"):
         import jax
 
+        if layout not in ("envelope", "grouped"):
+            raise ValueError(
+                f"layout must be 'envelope' or 'grouped', got {layout!r}"
+            )
         self.engine = engine
         self.executor = engine.executor
         self.solver = engine.solver
         self.kernel_impl = engine.solver.kernel_impl
-        # partition -> bucket group: blocks in different groups are never
-        # stacked into one launch (a SimulatedCluster keeps each profile
-        # class in its own batched launches)
+        # partition -> bucket group.  Under layout="grouped" blocks in
+        # different groups are never stacked into one launch (a
+        # SimulatedCluster keeps each profile class in its own batched
+        # launches); the envelope layout deliberately IGNORES groups — its
+        # whole point is one launch over everything, and the in-scan price
+        # vector (the only per-group observable) rides the carry
+        # independently of launch grouping.
         self.groups = None if groups is None else np.asarray(groups, dtype=np.int64)
+        self.layout = layout
         self._jax = jax
         self._tables: Optional[List[dict]] = None
         self._sig: Optional[Tuple] = None
+        # sig -> {"volume": n, "surface": n}: launch sites counted while the
+        # rhs traced (feeds stats.kernel_launches after every execution)
+        self._launch_sites: Dict[Tuple, Dict[str, int]] = {}
         self._rhs_fns: Dict[Tuple, object] = {}
         self._step_fns: Dict[Tuple, object] = {}
         self._run_fns: Dict[Tuple, object] = {}
@@ -121,6 +145,111 @@ class FusedStepPipeline:
         self._sig = None
 
     def _build_tables(self) -> None:
+        if self.layout == "envelope":
+            self._build_tables_envelope()
+        else:
+            self._build_tables_grouped()
+
+    def _build_tables_envelope(self) -> None:
+        """Pad EVERY block to the common envelope ``(env, env_own)`` = (max
+        ext pad, max own pad) and stack: one table set, one volume launch,
+        one surface launch per rhs regardless of the bucket split.
+
+        The masked tail of each block is arithmetically inert by
+        construction:
+
+        * padded ext rows gather ``q[0]`` with unit materials — finite
+          operands, and no real row references them because their neighbour
+          sentinel is -1 and every real row's neighbour id resolves inside
+          its own block's first ``pad`` rows (offsets move from ``i * pad``
+          to ``i * env`` without touching the intra-block layout);
+        * padded own rows gather ``q[0]`` with unit ``rho_o`` (divided by in
+          the volume kernel, hence nonzero) and scatter to the dump row
+          ``K``, which ``out[:K]`` discards;
+        * real rows see byte-for-byte the operands of the per-bucket path —
+          the kernels are block-diagonal / per-row over the element axis, so
+          the trajectory stays bitwise identical (asserted by the
+          envelope-vs-grouped differential tests)."""
+        import jax.numpy as jnp
+
+        blks = [b for b in self.engine._blocks if b is not None]
+        if not blks:
+            self._tables = []
+            self._sig = ()
+            return
+        K = self.solver.mesh.K
+        env = max(int(b["nbr_local"].shape[0]) for b in blks)
+        env_own = max(int(b["own_pad"].shape[0]) for b in blks)
+
+        def pad_idx(a, n, fill):
+            a = np.asarray(a)
+            if a.shape[0] < n:
+                tail = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
+                a = np.concatenate([a, tail])
+            return a
+
+        def pad_mat(key, n):
+            cols = []
+            for blk in blks:
+                a = np.asarray(blk[key])
+                if a.shape[0] < n:
+                    a = np.concatenate(
+                        [a, np.ones((n - a.shape[0],) + a.shape[1:], a.dtype)]
+                    )
+                cols.append(a)
+            return jnp.asarray(np.concatenate(cols))
+
+        ext = np.concatenate(
+            [
+                pad_idx(
+                    np.concatenate(
+                        [np.asarray(blk["own"]), np.asarray(blk["halo"])]
+                    ),
+                    env,
+                    0,
+                )
+                for blk in blks
+            ]
+        )
+        nbr = np.concatenate(
+            [
+                pad_idx(
+                    np.where(
+                        np.asarray(blk["nbr_local"]) >= 0,
+                        np.asarray(blk["nbr_local"]) + i * env,
+                        np.asarray(blk["nbr_local"]),
+                    ),
+                    env,
+                    -1,
+                )
+                for i, blk in enumerate(blks)
+            ]
+        )
+        own_pad = np.concatenate(
+            [pad_idx(np.asarray(blk["own_pad"]), env_own, 0) for blk in blks]
+        )
+        scat = np.concatenate(
+            [pad_idx(np.asarray(blk["scat"]), env_own, K) for blk in blks]
+        )
+        self._tables = [
+            {
+                "ext": jnp.asarray(ext),
+                "own_pad": jnp.asarray(own_pad),
+                "scat": jnp.asarray(scat),
+                "nbr": jnp.asarray(nbr),
+                "rho": pad_mat("rho", env),
+                "lam": pad_mat("lam", env),
+                "mu": pad_mat("mu", env),
+                "cp": pad_mat("cp", env),
+                "cs": pad_mat("cs", env),
+                "rho_o": pad_mat("rho_o", env_own),
+                "lam_o": pad_mat("lam_o", env_own),
+                "mu_o": pad_mat("mu_o", env_own),
+            }
+        ]
+        self._sig = ((env, env_own, len(blks), 0),)
+
+    def _build_tables_grouped(self) -> None:
         """Stack same-bucket blocks: one table set per (pad, pad_own, group)
         bucket.
 
@@ -193,21 +322,31 @@ class FusedStepPipeline:
 
     def _make_rhs(self, sig):
         """The fused full-field rhs: per bucket one gather + one volume
-        launch + one surface launch + one scatter."""
+        launch + one surface launch + one scatter (ONE of each total under
+        the envelope layout, where sig is a single bucket).
+
+        The ``counts`` side effects run at TRACE time only — the stage scan
+        and step loop trace this body once, so the recorded numbers are the
+        per-kernel launch sites baked into the compiled program per rhs
+        evaluation (the quantity the dispatch-count regression tests pin)."""
         from repro.dg.operators import surface_rhs, volume_rhs_impl
 
         s = self.solver
         D, metrics, lift = s.D, s.metrics, s.lift
         K = s.mesh.K
         impl = self.kernel_impl
+        launch_sites = self._launch_sites
 
         def rhs(q, tables, base):
+            counts = {"volume": 0, "surface": 0}
             out = base
             for (pad, pad_own, B, _gid), T in zip(sig, tables):
+                counts["volume"] += 1
                 vol = volume_rhs_impl(
                     q[T["own_pad"]], D, metrics,
                     T["rho_o"], T["lam_o"], T["mu_o"], kernel_impl=impl,
                 )
+                counts["surface"] += 1
                 sur = surface_rhs(
                     q[T["ext"]], T["nbr"], lift,
                     T["rho"], T["lam"], T["mu"], T["cp"], T["cs"],
@@ -218,9 +357,20 @@ class FusedStepPipeline:
                 sur_own = sur.reshape((B, pad) + sur.shape[1:])[:, :pad_own]
                 sur_own = sur_own.reshape((B * pad_own,) + sur.shape[1:])
                 out = out.at[T["scat"]].set(vol + sur_own)
+            launch_sites[sig] = counts
             return out[:K]
 
         return rhs
+
+    def _record_launches(self) -> None:
+        """Feed the trace-time launch-site counts of the active signature
+        into the stats ledger (each bucket issues exactly one volume + one
+        surface launch, so the sig-derived fallback covers the impossible
+        not-yet-traced case)."""
+        n = len(self._sig or ())
+        self.stats.record_launches(
+            self._launch_sites.get(self._sig) or {"volume": n, "surface": n}
+        )
 
     def _rhs_fn(self, sig):
         import jax
@@ -306,16 +456,20 @@ class FusedStepPipeline:
         """One fused full-field rhs evaluation (the unfused-equality probe)."""
         self._ensure()
         self.stats.record(1, 0)
-        return self._rhs_fn(self._sig)(q, self._tables, self.engine.scatter_base(q))
+        out = self._rhs_fn(self._sig)(q, self._tables, self.engine.scatter_base(q))
+        self._record_launches()
+        return out
 
     def step(self, q, res, dt):
         """One fused LSRK4(5) step; (q, res) are DONATED — callers must pass
         buffers they own (``run`` handles the copy)."""
         self._ensure()
         self.stats.record(1, 1)
-        return self._step_fn(self._sig)(
+        out = self._step_fn(self._sig)(
             q, res, dt, self._tables, self.engine.scatter_base(q)
         )
+        self._record_launches()
+        return out
 
     def run(self, q, n_steps: int, dt: Optional[float] = None, res=None,
             price=None):
@@ -340,12 +494,14 @@ class FusedStepPipeline:
         if price is None:
             fn = self._run_fn(self._sig)
             q, _ = fn(q, res, dt, int(n_steps), self._tables, base)
+            self._record_launches()
             return q
         price = jnp.asarray(price, dtype=jnp.float64 if q.dtype == jnp.float64
                             else jnp.float32)
         fn = self._priced_run_fn(self._sig)
         q, _, acc = fn(q, res, jnp.zeros_like(price), dt, int(n_steps),
                        self._tables, base, price)
+        self._record_launches()
         return q, acc
 
 

@@ -53,10 +53,23 @@ class DispatchStats:
 
     dispatches: int = 0
     steps_run: int = 0
+    # per-kernel launch sites per RHS evaluation inside the most recently
+    # used compiled program, recorded at TRACE time (the stage scan traces
+    # its body once, so launch sites per rhs = launches per stage = launches
+    # per step up to the constant 5 LSRK stages).  The envelope-layout fused
+    # pipeline must read {"volume": 1, "surface": 1} here regardless of the
+    # bucket split — the per-kernel half of the dispatch-count regression.
+    kernel_launches: dict = dataclasses.field(default_factory=dict)
 
     def record(self, dispatches: int, steps: int) -> None:
         self.dispatches += int(dispatches)
         self.steps_run += int(steps)
+
+    def record_launches(self, counts: dict) -> None:
+        """Install the per-kernel launch-site counts of the program that
+        just ran (replaces, not accumulates: the counts describe ONE
+        compiled program, not a running total)."""
+        self.kernel_launches = {str(k): int(v) for k, v in counts.items()}
 
     @property
     def dispatches_per_step(self) -> float:

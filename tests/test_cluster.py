@@ -346,20 +346,31 @@ def test_cluster_fused_run_matches_eager_and_flat(periodic_setup):
 
 
 def test_cluster_fused_groups_by_profile(periodic_setup):
-    """Same-profile node groups are batched separately: the bucket signature
-    carries one group per distinct (name, speed) profile class."""
+    """The default envelope layout collapses ALL profile groups into ONE
+    volume + ONE surface launch per rhs; layout="grouped" (the differential
+    reference) still batches each (name, speed) profile class separately."""
     from repro.runtime.cluster import NodeProfile, SimulatedCluster
 
-    solver, _ = periodic_setup
+    solver, q0 = periodic_setup
     cl = SimulatedCluster(
         solver,
         [NodeProfile(name="a"), NodeProfile(name="b", speed=2.0), NodeProfile(name="a")],
     )
     np.testing.assert_array_equal(cl.profile_groups(), [0, 1, 0])
-    sig = cl.fused_pipeline().bucket_signature
+    env = cl.fused_pipeline()
+    assert len(env.bucket_signature) == 1
+    assert sum(B for (_, _, B, _) in env.bucket_signature) == 3
+    grouped = cl.fused_pipeline(layout="grouped")
+    sig = grouped.bucket_signature
     assert sorted(set(g for (_, _, _, g) in sig)) == [0, 1]
     # the "a" nodes may share launches; "b" never rides with them
     assert sum(B for (_, _, B, g) in sig if g == 1) == 1
+    # one launch pair even across profile classes, and bitwise-identical
+    r_env = np.asarray(env.rhs(q0))
+    r_grp = np.asarray(grouped.rhs(q0))
+    assert (r_env == r_grp).all()
+    assert env.stats.kernel_launches == {"volume": 1, "surface": 1}
+    assert grouped.stats.kernel_launches["volume"] == len(sig)
 
 
 def test_cluster_fused_prices_link_inside_scan(periodic_setup):

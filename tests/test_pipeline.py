@@ -291,6 +291,10 @@ def test_dispatch_count_fused_run_one_per_run():
         assert len(run_calls) - before == 1, (n, len(run_calls) - before)
         assert len(step_calls) == 0  # never falls back to per-step stepping
         assert pipe.dispatches - d0 == 1
+        # inside the one compiled program: exactly one volume + one surface
+        # kernel launch per rhs evaluation (the envelope layout's invariant,
+        # counted at trace time on the DispatchStats ledger)
+        assert pipe.stats.kernel_launches == {"volume": 1, "surface": 1}
     assert pipe.stats.dispatches_per_step < 1.0
 
 
@@ -309,6 +313,8 @@ def test_dispatch_count_observe_path_one_per_step():
     eng.run(q0, 4, observe=True)
     assert len(step_calls) == 4  # 1 fused dispatch per observed step
     assert len(run_calls) == 0
+    # the per-step program carries exactly one launch of each kernel
+    assert pipe.stats.kernel_launches == {"volume": 1, "surface": 1}
 
 
 # ---------------------------------------------------------------------------
@@ -377,15 +383,16 @@ def test_fused_pipeline_property_resplice_sequences(times_seq, bucket):
 
 
 def test_fused_pipeline_grouped_buckets_stay_bitwise():
-    """A partition->group map splits buckets (same-profile cluster batching)
-    without changing the arithmetic: grouped fused == ungrouped fused ==
-    unfused, bitwise, and the signature separates the groups."""
+    """A partition->group map splits buckets under layout="grouped"
+    (same-profile cluster batching) without changing the arithmetic:
+    grouped fused == envelope fused == unfused, bitwise, and the grouped
+    signature separates the groups while the envelope stays one bucket."""
     solver = _periodic_solver(grid=(4, 4, 4))
     K = solver.mesh.K
     ex = NestedPartitionExecutor(K, 4, grid_dims=solver.mesh.grid, bucket=16)
     eng = BlockedDGEngine(solver, ex)
     plain = eng.pipeline()
-    grouped = eng.pipeline(groups=[0, 1, 0, 1])
+    grouped = eng.pipeline(groups=[0, 1, 0, 1], layout="grouped")
     gids = sorted(set(g for (_, _, _, g) in grouped.bucket_signature))
     assert gids == [0, 1]
     assert len(grouped.bucket_signature) > len(plain.bucket_signature)
@@ -395,6 +402,124 @@ def test_fused_pipeline_grouped_buckets_stay_bitwise():
     r_unfused = np.asarray(eng.rhs(q0))
     assert (r_plain == r_unfused).all()
     assert (r_grouped == r_unfused).all()
+
+
+# ---------------------------------------------------------------------------
+# envelope layout: one volume + one surface launch regardless of the split
+# ---------------------------------------------------------------------------
+
+
+def _uneven_engine(kernel_impl="xla", order=2, weights=(5.0, 1.0, 1.0, 1.0),
+                   grid=(4, 4, 4), bucket=8):
+    """An engine whose split lands in MULTIPLE buckets under the grouped
+    layout (uneven weights -> distinct padded sizes)."""
+    mesh = make_brick(grid, (1.0, 1.0, 1.0), periodic=True)
+    K = mesh.K
+    solver = DGSolver(mesh=mesh, order=order, rho=np.ones(K), lam=np.ones(K),
+                      mu=np.zeros(K), kernel_impl=kernel_impl)
+    ex = NestedPartitionExecutor(K, len(weights), grid_dims=grid, bucket=bucket)
+    ex.apply(ex.solve(list(weights)))
+    return solver, BlockedDGEngine(solver, ex)
+
+
+@pytest.mark.parametrize("kernel_impl", ["xla", "interpret"])
+def test_envelope_collapses_multibucket_split_to_one_launch(kernel_impl):
+    """The tentpole invariant: an uneven split that the grouped layout
+    batches into MULTIPLE launch pairs compiles to exactly ONE volume + ONE
+    surface launch per rhs under the envelope layout — bitwise identical to
+    both the grouped path and the unfused schedule."""
+    order = 1 if kernel_impl == "interpret" else 2
+    solver, eng = _uneven_engine(kernel_impl=kernel_impl, order=order)
+    env = eng.pipeline()
+    grp = eng.pipeline(layout="grouped")
+    assert len(grp.bucket_signature) > 1  # the split is genuinely ragged
+    assert len(env.bucket_signature) == 1
+    assert sum(B for (_, _, B, _) in env.bucket_signature) == sum(
+        B for (_, _, B, _) in grp.bucket_signature
+    )
+    q0 = _rand_state(solver)
+    r_env = np.asarray(env.rhs(q0))
+    r_grp = np.asarray(grp.rhs(q0))
+    r_unf = np.asarray(eng.rhs(q0))
+    assert (r_env == r_unf).all(), np.abs(r_env - r_unf).max()
+    assert (r_grp == r_unf).all()
+    assert env.stats.kernel_launches == {"volume": 1, "surface": 1}
+    assert grp.stats.kernel_launches["volume"] == len(grp.bucket_signature)
+    # the fused run trajectory agrees too (scan over stages, donated carry)
+    dt = solver.cfl_dt()
+    q_env = np.asarray(env.run(q0, 3, dt=dt))
+    q_grp = np.asarray(grp.run(q0, 3, dt=dt))
+    q_unf = np.asarray(_unfused_run(eng, q0, 3, dt))
+    assert (q_env == q_unf).all()
+    assert (q_grp == q_unf).all()
+    assert env.stats.kernel_launches == {"volume": 1, "surface": 1}
+
+
+@pytest.mark.parametrize("kernel_impl", ["xla", "interpret"])
+@pytest.mark.parametrize("split", ["giant", "singletons"])
+def test_envelope_degenerate_splits_bitwise(kernel_impl, split):
+    """Degenerate extremes: one giant bucket (P=1 holds everything) and P
+    singleton partitions (bucket=1 -> every block its own size class) both
+    stay bitwise under the envelope layout: the single rhs vs the unfused
+    path, and the multi-step trajectory vs the per-bucket-group (grouped)
+    fused path.  (The trajectory reference is the grouped FUSED run, not the
+    eager per-step loop: on some tiny meshes XLA fuses the compiled scan
+    differently from the per-step jit — an FMA artifact shared by every
+    fused layout — while envelope vs grouped is exactly the batching change
+    this test pins.)"""
+    grid = (2, 2, 2) if split == "singletons" else (4, 4, 2)
+    mesh = make_brick(grid, (1.0, 1.0, 0.5), periodic=True)
+    K = mesh.K
+    solver = DGSolver(mesh=mesh, order=1, rho=np.ones(K), lam=np.ones(K),
+                      mu=np.zeros(K), kernel_impl=kernel_impl)
+    if split == "giant":
+        ex = NestedPartitionExecutor(K, 1, grid_dims=grid, bucket=8)
+    else:
+        ex = NestedPartitionExecutor(K, K, grid_dims=grid, bucket=1)
+    eng = BlockedDGEngine(solver, ex)
+    env = eng.pipeline()
+    grp = eng.pipeline(layout="grouped")
+    assert len(env.bucket_signature) == 1
+    q0 = _rand_state(solver, seed=7)
+    r_env = np.asarray(env.rhs(q0))
+    r_unf = np.asarray(eng.rhs(q0))
+    assert (r_env == r_unf).all(), np.abs(r_env - r_unf).max()
+    assert env.stats.kernel_launches == {"volume": 1, "surface": 1}
+    dt = solver.cfl_dt()
+    q_env = np.asarray(env.run(q0, 2, dt=dt))
+    q_grp = np.asarray(grp.run(q0, 2, dt=dt))
+    assert (q_env == q_grp).all(), np.abs(q_env - q_grp).max()
+    assert env.stats.kernel_launches == {"volume": 1, "surface": 1}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.floats(0.2, 6.0), min_size=2, max_size=4),
+       st.sampled_from([1, 2, 4, 8]))
+def test_envelope_property_random_splits_bitwise(weights, bucket):
+    """Property: ANY random bucket split — whatever ragged mix of padded
+    sizes the weights produce — collapses to one launch pair under the
+    envelope layout and keeps the q trajectory bitwise identical to the
+    grouped reference."""
+    grid = (4, 4, 2)
+    mesh = make_brick(grid, (1.0, 1.0, 0.5), periodic=True)
+    K = mesh.K
+    solver = DGSolver(mesh=mesh, order=1, rho=np.ones(K), lam=np.ones(K),
+                      mu=np.zeros(K))
+    ex = NestedPartitionExecutor(K, len(weights), grid_dims=grid, bucket=bucket)
+    ex.apply(ex.solve(list(weights)))
+    eng = BlockedDGEngine(solver, ex)
+    env = eng.pipeline()
+    grp = eng.pipeline(layout="grouped")
+    assert len(env.bucket_signature) == 1
+    q0 = _rand_state(solver, seed=int(bucket + sum(w * 10 for w in weights)) % 97)
+    r_env = np.asarray(env.rhs(q0))
+    r_grp = np.asarray(grp.rhs(q0))
+    assert (r_env == r_grp).all(), np.abs(r_env - r_grp).max()
+    assert env.stats.kernel_launches == {"volume": 1, "surface": 1}
+    dt = solver.cfl_dt()
+    q_env = np.asarray(env.run(q0, 2, dt=dt))
+    q_grp = np.asarray(grp.run(q0, 2, dt=dt))
+    assert (q_env == q_grp).all()
 
 
 def test_sharded_pipeline_single_device_mesh():
