@@ -8,7 +8,14 @@ drivers on the same engine and split:
   scatter target per call, stage arithmetic dispatched eagerly;
 * **fused** — ``runtime.pipeline.FusedStepPipeline``: the whole time loop
   as ONE donated program (``lax.scan`` over steps, scan over stages,
-  same-bucket blocks batched into one launch per bucket).
+  same-bucket blocks batched into one launch per bucket);
+* **observe** — the same fused driver with the in-scan observation channel
+  on (``run(observe=True)``): one ``run_observed`` dispatch per rebalance
+  chunk, the executor fed a wall-attributed ``CalibrationReport`` per
+  chunk.  The row's ``overhead_vs_fused`` tracks what continuous
+  calibration costs; ``dispatches_per_step`` is measured on the
+  ``DispatchStats`` ledger and CI gates it at exactly one dispatch per
+  chunk.
 
 With ``--devices N`` (and N visible devices) a third row measures the
 **sharded** fused driver — ``runtime.pipeline.ShardedStepPipeline``, the
@@ -120,6 +127,23 @@ def run(grid=(8, 8, 4), order=4, partitions=4, bucket=16, n_steps=20, smoke=Fals
     t_unfused = timeit(lambda: _unfused_run(eng, q0, n_steps, dt), reps=reps, warmup=1)
     t_fused = timeit(lambda: pipe.run(q0, n_steps, dt=dt), reps=reps, warmup=1)
 
+    # observe-overhead row: the in-scan observation channel at rebalance-
+    # chunk granularity (run_observed per chunk, one dispatch each) on its
+    # own engine/executor, so the timed rebalances never touch the fused
+    # row's tables.  The ledgered dispatch count is the acceptance gate CI
+    # asserts on: observation must never drop below 1 dispatch per chunk.
+    chunk = max(1, n_steps // 4)
+    ex_obs = NestedPartitionExecutor(K, partitions, grid_dims=grid, bucket=bucket,
+                                     rebalance_every=chunk)
+    eng_obs = BlockedDGEngine(solver, ex_obs)
+    pipe_obs = eng_obs.pipeline()
+    t_observe = timeit(
+        lambda: jax.block_until_ready(eng_obs.run(q0, n_steps, dt=dt, observe=True)),
+        reps=reps, warmup=1,
+    )
+    sps_observe = n_steps / t_observe
+    disp_observe = pipe_obs.stats.dispatches / max(1, pipe_obs.stats.steps_run)
+
     # host dispatches per step — an ANALYTIC count of the drivers timed in
     # THIS file, not a measurement: the `_unfused_run` Python-loop driver
     # issues, per stage, ~6 device calls per block (gather / interior /
@@ -140,6 +164,14 @@ def run(grid=(8, 8, 4), order=4, partitions=4, bucket=16, n_steps=20, smoke=Fals
         },
         "unfused": {"steps_per_sec": sps_unfused, "dispatches_per_step": disp_unfused},
         "fused": {"steps_per_sec": sps_fused, "dispatches_per_step": disp_fused},
+        "observe": {
+            "steps_per_sec": sps_observe,
+            # measured on the DispatchStats ledger, not analytic
+            "dispatches_per_step": disp_observe,
+            "chunk": chunk,
+            "observe_chunks": pipe_obs.stats.observe_chunks,
+            "overhead_vs_fused": t_observe / t_fused - 1.0,
+        },
         "speedup": speedup,
         # steps_per_sec is measured; dispatches_per_step is the analytic
         # count for the two drivers defined in benchmarks/pipeline_throughput
@@ -155,6 +187,10 @@ def run(grid=(8, 8, 4), order=4, partitions=4, bucket=16, n_steps=20, smoke=Fals
          f"{sps_unfused:.1f} steps/s; {disp_unfused} dispatches/step")
     emit("pipeline/fused_scan", t_fused / n_steps * 1e6,
          f"{sps_fused:.1f} steps/s; {disp_fused:.2f} dispatches/step")
+    emit("pipeline/fused_observe", t_observe / n_steps * 1e6,
+         f"{sps_observe:.1f} steps/s; {disp_observe:.2f} dispatches/step; "
+         f"chunk={chunk}; overhead {100 * (t_observe / t_fused - 1.0):+.1f}% "
+         "vs fused")
     emit("pipeline/speedup", speedup, f"K={K} order={order} P={partitions}")
     assert np.isfinite(speedup)
     return result

@@ -45,11 +45,12 @@ inside the compiled step loop.  The per-step jitted driver survives as
 ``BlockedDGEngine`` kept the four-phase path).
 
 Online rebalancing: ``run(..., observe=True)`` adopts the step-driver API of
-``repro.runtime.executor.NestedPartitionExecutor`` — each fused chunk's wall
-time is observed (synchronous-step attribution) and the bound executor
-(``bind_executor`` / ``make_executor``) re-solves the nested split on
-schedule.  The pre-protocol ``run(executor=...)`` spelling keeps a
-one-release deprecation shim.
+``repro.runtime.executor.NestedPartitionExecutor`` — each fused chunk runs
+through the pipeline's in-scan observation channel
+(``ShardedStepPipeline.run_observed``: per-shard accumulators psum-reduced
+inside the compiled program, chunk wall time attributed by their shares)
+and the bound executor (``bind_executor`` / ``make_executor``) re-solves
+the nested split on schedule.
 """
 
 from __future__ import annotations
@@ -348,7 +349,6 @@ class PartitionedDG:
         *,
         observe: bool = False,
         fused: bool = True,
-        executor=None,
     ) -> jnp.ndarray:
         """Advance ``n_steps``.
 
@@ -360,25 +360,13 @@ class PartitionedDG:
         step per host dispatch) kept for calibration and differential tests.
 
         With ``observe=True`` the run is segmented on the bound executor's
-        rebalance schedule: each segment's wall time is observed
-        (synchronous-step attribution) and the nested split re-solved — the
-        calibrate->solve->resplice loop running alongside the SPMD compute.
-
-        ``executor=`` is the pre-Engine-protocol spelling of the same
-        thing and is deprecated: pass ``observe=True`` after
-        ``bind_executor(executor)`` instead (one-release shim)."""
-        if executor is not None:
-            import warnings
-
-            warnings.warn(
-                "PartitionedDG.run(executor=...) is deprecated; use "
-                "bind_executor(executor) + run(observe=True) — the unified "
-                "Engine protocol spelling",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            self.bind_executor(executor)
-            observe = True
+        (``bind_executor`` / ``make_executor``) rebalance schedule: each
+        chunk is ONE fused dispatch through the pipeline's in-scan
+        observation channel — per-shard cost accumulators psum-reduced
+        inside the compiled program, the chunk's wall time attributed by
+        their shares — and the nested split re-solved, so the
+        calibrate->solve->resplice loop runs at full fused speed alongside
+        the SPMD compute."""
         executor = self.bind_executor() if observe else None
         dt = dt or self.solver.cfl_dt()
 
@@ -391,11 +379,8 @@ class PartitionedDG:
                 chunk = n_steps - done
                 if executor.rebalance_every > 0:
                     chunk = min(executor.rebalance_every, chunk)
-                t0 = time.perf_counter()
-                q_part = pipe.run(q_part, chunk, dt=dt)
-                jax.block_until_ready(q_part)
-                executor.observe_total((time.perf_counter() - t0) / chunk)
-                executor.advance(chunk)
+                q_part, report = pipe.run_observed(q_part, chunk, dt=dt)
+                executor.observe_chunk(report, chunk)
                 done += chunk
             return q_part
 

@@ -4,8 +4,8 @@
 ``DGSolver`` (flat reference), ``PartitionedDG`` (SPMD slabs),
 ``BlockedDGEngine`` (per-partition blocks) and ``SimulatedCluster``
 (heterogeneous nodes) each grew their own ``run(...)`` spelling across
-PRs 1–5; they now share this protocol (divergent keyword spellings keep a
-one-release deprecation shim).
+PRs 1–5; they now share this protocol (the last divergent spelling, the
+``PartitionedDG.run(executor=)`` shim, expired and is gone).
 """
 
 from typing import Any, Optional, Protocol, runtime_checkable

@@ -237,8 +237,11 @@ class SimulatedCluster:
         whole horizon is one donated device program per rebalance chunk,
         with the simulated per-node step price (compute/speed + the
         alpha-beta link on the exact face cuts) accumulated INSIDE the
-        compiled scan; with ``observe`` the accumulated seconds feed the
-        executor per chunk and it rebalances on its schedule.
+        compiled scan via the in-scan observation channel
+        (``run_observed(..., attribute_wall=False)`` — the report carries
+        the virtual price itself, keeping the simulation deterministic);
+        with ``observe`` each chunk's report feeds
+        ``executor.observe_chunk`` and it rebalances on its schedule.
         ``fused=False`` is the eager per-step reference path (kept for
         calibration-style per-step observation)."""
         from repro.dg.rk import lsrk45_step
@@ -253,12 +256,14 @@ class SimulatedCluster:
                 if observe and self.executor.rebalance_every > 0:
                     chunk = min(self.executor.rebalance_every, chunk)
                 pipe = self.fused_pipeline()  # after a resplice: new tables
-                price = self.step_times()  # deterministic sim: counts + link
-                q, sim = pipe.run(q, chunk, dt=dt, price=price)
-                self.last_sim_times = np.asarray(sim) / chunk
+                q, report = pipe.run_observed(
+                    q, chunk, dt=dt,
+                    price=self.step_times(),  # deterministic: counts + link
+                    attribute_wall=False,
+                )
+                self.last_sim_times = np.asarray(report.step_s)
                 if observe:
-                    self.executor.observe(self.last_sim_times)
-                    self.executor.advance(chunk)
+                    self.executor.observe_chunk(report, chunk)
                 done += chunk
             return q
         res = jnp.zeros_like(q)

@@ -433,6 +433,15 @@ class NestedPartitionExecutor:
         measurement."""
         self.observe(np.full(self.n_partitions, float(dt)))
 
+    def observe_chunk(self, report: "CalibrationReport", n_steps: int):
+        """In-scan observation entry point: record one fused chunk's
+        per-partition step seconds (a ``run_observed`` report — straggler
+        factors are applied here, inside ``observe``, exactly once) and
+        advance the rebalance schedule by the chunk's steps.  Returns the
+        applied ``Plan`` when the schedule fired, else ``None``."""
+        self.observe(np.asarray(report.step_s))
+        return self.advance(int(n_steps))
+
     # -- solve / resplice ---------------------------------------------------
 
     def solve(self, weights: Sequence[float]) -> Plan:
@@ -869,29 +878,51 @@ class BlockedDGEngine:
         loop — ``lax.scan`` over steps, scan over the five LSRK stages,
         same-bucket blocks batched into one kernel launch — runs as a single
         donated device program, so host dispatches drop from
-        O(stages x blocks) to O(1) per run.  With ``observe`` the executor
-        gets per-partition timings (the per-block schedule path, which is
-        what calibration keeps existing for) and rebalances on schedule,
-        stepping through the pipeline one fused step at a time.
-        ``fused=False`` is the eager per-block reference path."""
+        O(stages x blocks) to O(1) per run.  With ``observe`` the run is
+        segmented on the executor's rebalance schedule and each chunk is
+        ONE fused dispatch through ``FusedStepPipeline.run_observed``: the
+        per-partition cost accumulator rides the scan carry, the host
+        synchronizes once per chunk, and the wall-attributed
+        ``CalibrationReport`` feeds ``executor.observe_chunk`` — so
+        observation never un-fuses the hot path and q stays bitwise
+        identical to the unobserved run (the priced and plain programs
+        perform the same field arithmetic).  ``fused=False`` is the eager
+        per-block reference path; with ``observe`` it wall-times each step
+        (one sync per step) and attributes it by the current counts."""
+        import jax
         import jax.numpy as jnp
 
         from repro.dg.rk import lsrk45_step
+        from repro.runtime.schedule import CalibrationReport
 
         dt = dt or self.solver.cfl_dt()
         if fused and not observe:
             return self.pipeline().run(q, n_steps, dt=dt)
-        pipe = self.pipeline() if fused else None
-        # detach from the caller's buffer so the donated fused step never
-        # consumes an array the caller still holds
-        q = jnp.copy(q) if fused else q
+        if fused:
+            done = 0
+            while done < n_steps:
+                chunk = n_steps - done
+                if self.executor.rebalance_every > 0:
+                    chunk = min(self.executor.rebalance_every, chunk)
+                # after a resplice the pipeline rebuilds its tables; the
+                # compiled program is reused while the bucket signature
+                # (stable under bucketed counts) recurs
+                q, report = self.pipeline().run_observed(q, chunk, dt=dt)
+                self.executor.observe_chunk(report, chunk)
+                done += chunk
+            return q
         res = jnp.zeros_like(q)
+        shares = np.maximum(self.executor.counts.astype(np.float64), 0.0)
         for _ in range(n_steps):
             if observe:
-                self.executor.observe(self.measure_block_times(q))
-                self.executor.advance()
-            if fused:
-                q, res = pipe.step(q, res, dt)
+                t0 = time.perf_counter()
+                q, res = lsrk45_step(q, res, self.rhs, dt)
+                jax.block_until_ready(q)
+                report = CalibrationReport.from_chunk(
+                    time.perf_counter() - t0, shares, 1
+                )
+                self.executor.observe_chunk(report, 1)
+                shares = np.maximum(self.executor.counts.astype(np.float64), 0.0)
             else:
                 q, res = lsrk45_step(q, res, self.rhs, dt)
         return q

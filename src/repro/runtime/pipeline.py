@@ -45,10 +45,17 @@ entire blocked time loop into ONE donated program:
   different (simulated) node classes in separate buckets, so a
   ``SimulatedCluster`` batches each same-profile node group through its own
   launches inside the one compiled program;
-* **in-scan pricing** — ``run(..., price=...)`` threads a per-partition
-  per-step cost vector through the step loop's carry, so a simulated
-  cluster's link+compute seconds accumulate inside the compiled scan
-  instead of in host Python.
+* **in-scan pricing / observation** — ``run(..., price=...)`` threads a
+  per-partition per-step cost vector through the step loop's carry, so a
+  simulated cluster's link+compute seconds accumulate inside the compiled
+  scan instead of in host Python.  ``run_observed`` generalizes the same
+  carry-riding accumulator into the runtime's measurement channel: one
+  fused dispatch per rebalance chunk, ``block_until_ready`` ONCE at the
+  chunk boundary, and the chunk's host wall time attributed across
+  partitions by the accumulator shares
+  (``CalibrationReport.from_chunk``) — so the online
+  calibrate→solve→resplice loop runs at full fused speed and observation
+  never leaves the compiled program.
 
 ``ShardedStepPipeline`` is the multi-device incarnation of the same idea
 for the SPMD slab path (``repro.dg.partitioned.PartitionedDG``): the whole
@@ -81,11 +88,12 @@ index tables.
 
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.runtime.schedule import DispatchStats
+from repro.runtime.schedule import CalibrationReport, DispatchStats
 
 __all__ = ["FusedStepPipeline", "ShardedStepPipeline"]
 
@@ -504,6 +512,45 @@ class FusedStepPipeline:
         self._record_launches()
         return q, acc
 
+    def run_observed(self, q, n_steps: int, dt: Optional[float] = None,
+                     price=None, attribute_wall: bool = True):
+        """Advance ``n_steps`` as ONE fused dispatch AND observe it: the
+        in-scan measurement channel of the calibrate→solve→resplice loop.
+
+        The per-partition cost accumulator rides the scan carry (the
+        ``_priced_run_fn`` family), so the relative shares of work never
+        leave the compiled program; the host synchronizes exactly once per
+        chunk (``block_until_ready``) and attributes the chunk's wall
+        seconds across partitions by those shares
+        (``CalibrationReport.from_chunk``).  ``price`` defaults to the
+        executor's current element counts — the work proxy of a fused
+        single-arena program, where each partition's slice of the launch
+        scales with its element count.  With ``attribute_wall=False`` the
+        report carries the accumulated price itself (``acc / n_steps``, no
+        wall measurement) — the deterministic mode ``SimulatedCluster``
+        uses for its virtual link+compute pricing.
+
+        Returns ``(q, CalibrationReport)``; straggler factors are NOT in
+        the report — ``NestedPartitionExecutor.observe`` applies them, the
+        single injection point."""
+        import jax
+
+        if price is None:
+            price = np.maximum(
+                self.executor.counts.astype(np.float64), 0.0
+            )
+        t0 = time.perf_counter()
+        q, acc = self.run(q, n_steps, dt=dt, price=price)
+        jax.block_until_ready(q)
+        wall = time.perf_counter() - t0
+        self.stats.record_chunk()
+        acc = np.asarray(acc, dtype=np.float64)
+        if attribute_wall:
+            report = CalibrationReport.from_chunk(wall, acc, n_steps)
+        else:
+            report = CalibrationReport.from_totals(acc / max(1, int(n_steps)))
+        return q, report
+
 
 class ShardedStepPipeline:
     """The SPMD slab time loop as ONE donated shard_map program spanning all
@@ -526,6 +573,7 @@ class ShardedStepPipeline:
         self._rhs_c = None
         self._step_c = None
         self._run_c = None
+        self._priced_run_c = None
         self.stats = DispatchStats()
 
     @property
@@ -615,6 +663,57 @@ class ShardedStepPipeline:
             self._run_c = jax.jit(self._shard(local_run, 2), donate_argnums=(0, 1))
         return self._run_c
 
+    def _priced_run_fn(self):
+        if self._priced_run_c is None:
+            import jax
+            import jax.numpy as jnp
+            from jax.sharding import PartitionSpec
+
+            from repro.dg.rk import lsrk45_step
+            from repro.jax_compat import shard_map
+
+            p = self.pdg
+            local_rhs = self._local_rhs()
+            axis, n_shards = p.axis, p.P
+
+            def local_run(q, res, acc, dt, n, price, nbr, rho, lam, mu, cp, cs):
+                # the blocked pipeline's carry-riding accumulator, per
+                # shard: each rank charges its own per-step price inside
+                # the compiled loop (the ring ppermute of the exchange
+                # phase is traced into the same body)
+                def body(_, carry):
+                    q, res, acc = carry
+                    q, res = lsrk45_step(
+                        q, res,
+                        lambda x: local_rhs(x, nbr, rho, lam, mu, cp, cs), dt,
+                    )
+                    return q, res, acc + price
+
+                q, res, acc = jax.lax.fori_loop(0, n, body, (q, res, acc))
+                # collect every shard's scalar accumulator into ONE
+                # replicated (P,) vector inside the compiled program —
+                # one-hot placement + psum over the mesh axis — so the
+                # host reads all per-shard totals from a single output
+                full = (
+                    jnp.zeros((n_shards,), acc.dtype)
+                    .at[jax.lax.axis_index(axis)]
+                    .set(acc[0])
+                )
+                return q, res, jax.lax.psum(full, axis)
+
+            qs = p.spec_q
+            scalar = PartitionSpec()
+            vec = PartitionSpec(p.axis)
+            f = shard_map(
+                local_run,
+                mesh=p.mesh_axes,
+                in_specs=(qs, qs, vec, scalar, scalar, vec) + p._operand_specs(),
+                out_specs=(qs, qs, scalar),
+                check_vma=False,
+            )
+            self._priced_run_c = jax.jit(f, donate_argnums=(0, 1, 2))
+        return self._priced_run_c
+
     # -- execution ----------------------------------------------------------
 
     def _sharded_copy(self, x):
@@ -653,3 +752,43 @@ class ShardedStepPipeline:
         q, _ = fn(q, res, jnp.asarray(dt, q.dtype),
                   jnp.asarray(int(n_steps), jnp.int32), *self.pdg._operands())
         return q
+
+    def run_observed(self, q, n_steps: int, dt: Optional[float] = None,
+                     price=None, attribute_wall: bool = True):
+        """Advance ``n_steps`` as ONE fused multi-device dispatch AND
+        observe it (the sharded twin of
+        ``FusedStepPipeline.run_observed``): per-shard cost accumulators
+        ride the donated carry and are reduced to one replicated vector
+        with ``psum`` INSIDE the compiled program, then the chunk's host
+        wall time (one ``block_until_ready``) is attributed across shards
+        by those shares.  ``price`` defaults to the (equal) per-slab
+        element counts; returns ``(q, CalibrationReport)``."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        p = self.pdg
+        dt = dt if dt is not None else self.solver.cfl_dt()
+        if price is None:
+            price = np.full(p.P, float(p.K_loc))
+        dtype = jnp.float64 if q.dtype == jnp.float64 else jnp.float32
+        sh = NamedSharding(p.mesh_axes, PartitionSpec(p.axis))
+        price = jax.device_put(jnp.asarray(price, dtype), sh)
+        acc = jax.device_put(jnp.zeros((p.P,), dtype), sh)
+        q = self._sharded_copy(q)
+        res = self._sharded_copy(jnp.zeros_like(q))
+        fn = self._priced_run_fn()
+        self.stats.record(1, int(n_steps))
+        t0 = time.perf_counter()
+        q, _, acc = fn(q, res, acc, jnp.asarray(dt, q.dtype),
+                       jnp.asarray(int(n_steps), jnp.int32), price,
+                       *p._operands())
+        jax.block_until_ready(q)
+        wall = time.perf_counter() - t0
+        self.stats.record_chunk()
+        acc = np.asarray(acc, dtype=np.float64)
+        if attribute_wall:
+            report = CalibrationReport.from_chunk(wall, acc, n_steps)
+        else:
+            report = CalibrationReport.from_totals(acc / max(1, int(n_steps)))
+        return q, report

@@ -53,6 +53,10 @@ class DispatchStats:
 
     dispatches: int = 0
     steps_run: int = 0
+    # fused chunks observed in-scan (run_observed calls): together with
+    # ``dispatches`` this pins the observe-path invariant — observe=True
+    # costs exactly ONE dispatch per rebalance chunk, never one per step
+    observe_chunks: int = 0
     # per-kernel launch sites per RHS evaluation inside the most recently
     # used compiled program, recorded at TRACE time (the stage scan traces
     # its body once, so launch sites per rhs = launches per stage = launches
@@ -64,6 +68,10 @@ class DispatchStats:
     def record(self, dispatches: int, steps: int) -> None:
         self.dispatches += int(dispatches)
         self.steps_run += int(steps)
+
+    def record_chunk(self, n: int = 1) -> None:
+        """Ledger one observed fused chunk (an in-scan ``run_observed``)."""
+        self.observe_chunks += int(n)
 
     def record_launches(self, counts: dict) -> None:
         """Install the per-kernel launch-site counts of the program that
@@ -198,6 +206,30 @@ class CalibrationReport:
         z = np.zeros_like(t)
         return CalibrationReport(boundary_s=z, interior_s=t, transfer_s=z.copy(),
                                  correction_s=z.copy())
+
+    @staticmethod
+    def from_chunk(
+        wall_s: float, shares: Sequence[float], n_steps: int
+    ) -> "CalibrationReport":
+        """A report from ONE fused chunk: total host wall seconds for the
+        chunk (``block_until_ready`` once per chunk), attributed across
+        partitions by the in-scan accumulator ``shares`` — the carry-riding
+        per-partition cost totals the fused scan accumulated on device.
+
+        The chunk's per-step wall time is split proportionally to the
+        shares (degenerate all-zero shares fall back to uniform), so the
+        sum of the per-partition step seconds equals ``wall_s / n_steps``
+        and the executor's throughput model sees real elapsed time at
+        chunk granularity without a single extra dispatch.  Like
+        ``from_totals`` the result is component-unresolved."""
+        s = np.asarray(shares, dtype=np.float64)
+        if s.ndim != 1 or len(s) == 0:
+            raise ValueError(f"shares must be a non-empty vector, got shape {s.shape}")
+        s = np.maximum(s, 0.0)
+        tot = s.sum()
+        s = s / tot if tot > 0 else np.full(len(s), 1.0 / len(s))
+        per_step = float(wall_s) / max(1, int(n_steps))
+        return CalibrationReport.from_totals(per_step * s)
 
     @staticmethod
     def median(reports: Sequence["CalibrationReport"]) -> "CalibrationReport":

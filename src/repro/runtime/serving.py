@@ -251,12 +251,15 @@ def decode_batch(
     """
     import jax
 
-    t0 = time.time()
+    # perf_counter, NOT time.time(): the wall clock is non-monotonic (NTP
+    # slew / step adjustments), so time.time() deltas can go negative or
+    # skew — and these two numbers price TTFT/latency downstream
+    t0 = time.perf_counter()
     tok, cache = kernels.prefill_rows(params, rows)
     jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
     out = [np.asarray(tok)]
-    t1 = time.time()
+    t1 = time.perf_counter()
     if fused and n_gen > 1:
         toks, tok, _ = kernels.decode_scan(params, (cache, tok), n_gen - 1)
         jax.block_until_ready(toks)
@@ -268,7 +271,7 @@ def decode_batch(
             kernels.stats.record(1, 1)
             out.append(np.asarray(tok))
         jax.block_until_ready(tok)
-    return np.stack(out, axis=1), t_prefill, time.time() - t1
+    return np.stack(out, axis=1), t_prefill, time.perf_counter() - t1
 
 
 def warm_batch(kernels: ServeKernels, params, rows: np.ndarray, n_gen: int, *, fused: bool = True):
@@ -552,6 +555,9 @@ class ContinuousBatchingLoop:
         self.stats = DispatchStats()  # decode-chunk dispatches only
         self.n_chunks = 0
         self.aux_dispatches = 0  # prefill + splice dispatches (not the scan)
+        # the most recent per-chunk observation fed to the executor (the
+        # serving loop's arm of the continuous calibrate→solve→resplice)
+        self.last_chunk_report: Optional[CalibrationReport] = None
         self.requests: List[ServeRequest] = []
         self._calib_counts: Optional[np.ndarray] = None
         self._calib_steps = 1
@@ -767,6 +773,7 @@ class ContinuousBatchingLoop:
             # ---- one fused decode chunk ---------------------------------
             if any(r is not None for r in rows):
                 n_live = sum(r is not None for r in rows)
+                t0_chunk = time.perf_counter()
                 toks, tok, cache = self.kernels.decode_chunk(
                     self.params, (cache, tok), active, self.chunk
                 )
@@ -774,8 +781,29 @@ class ContinuousBatchingLoop:
                 self.kernels.stats.record(1, self.chunk)
                 self.n_chunks += 1
                 jax.block_until_ready(toks)
-                clock.advance(self.modeled_chunk_seconds(n_live))
+                wall_chunk = time.perf_counter() - t0_chunk
+                modeled_chunk = self.modeled_chunk_seconds(n_live)
+                clock.advance(modeled_chunk)
                 t_end = clock.now()
+                # continuous in-loop observation: each decode chunk's
+                # seconds (measured wall under the wall clock, modeled —
+                # hence deterministic — under the virtual clock) are
+                # attributed across the calibration partitions by their
+                # current row shares and fed to the executor, so the
+                # calibrate→solve→resplice loop keeps running at chunk
+                # granularity under serving load with zero extra
+                # dispatches (straggler factors enter once, in observe)
+                chunk_s = (
+                    modeled_chunk if self.clock_kind == "virtual" else wall_chunk
+                )
+                shares = np.maximum(
+                    self.executor.counts.astype(np.float64), 0.0
+                )
+                self.last_chunk_report = CalibrationReport.from_chunk(
+                    chunk_s, shares, self.chunk
+                )
+                self.executor.observe_chunk(self.last_chunk_report, self.chunk)
+                self.stats.record_chunk()
                 toks_np = np.asarray(toks)  # (chunk, B)
                 dead = []
                 for j, req in enumerate(rows):

@@ -142,11 +142,15 @@ for slabs in (2, 4):
         pipe.run(qp, n, dt=dt)
         assert len(calls) - before == 1, (slabs, n, len(calls) - before)
         assert pipe.stats.dispatches - d0 == 1
-    # executor-segmented fused run: one dispatch per rebalance chunk
-    ex = pdg.make_executor(rebalance_every=2)
-    before = len(calls)
-    pdg.run(qp, 4, dt=dt, executor=ex)
-    assert len(calls) - before == 2, len(calls) - before  # 4 steps / chunks of 2
+    # executor-segmented fused observe run: one dispatch per rebalance
+    # chunk, now through the in-scan observation channel (run_observed)
+    ex = pdg.bind_executor(pdg.make_executor(rebalance_every=2))
+    obs_calls = []
+    orig_obs = pipe._priced_run_fn()
+    pipe._priced_run_c = lambda *a, **k: (obs_calls.append(1), orig_obs(*a, **k))[1]
+    pdg.run(qp, 4, dt=dt, observe=True)
+    assert len(obs_calls) == 2, len(obs_calls)  # 4 steps / chunks of 2
+    assert pipe.stats.observe_chunks == 2
     assert ex.round >= 1  # the executor rebalanced on schedule
 print("OK")
 """

@@ -201,16 +201,78 @@ def test_fused_pipeline_batches_same_bucket_blocks():
 
 
 def test_fused_observe_path_feeds_executor():
-    """run(observe=True) steps the fused pipeline while the per-block
-    schedule path (kept for calibration) feeds per-partition timings."""
+    """run(observe=True) stays fused: the in-scan accumulator + chunked
+    wall time feed the executor one CalibrationReport per rebalance chunk
+    (4 steps / chunks of 2 = 2 observations), and it rebalances on
+    schedule."""
     solver = make_two_tree_solver(grid=(6, 4, 4), order=2, extent=(2.0, 1.0, 1.0))
     q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5))
     ex = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8,
                                  rebalance_every=2, smoothing=1.0)
     eng = BlockedDGEngine(solver, ex)
     q1 = eng.run(q0, 4, observe=True)
-    assert ex._n_obs >= 4 and ex.round >= 1
+    assert ex._n_obs == 2 and ex.round >= 1
+    assert eng.pipeline().stats.observe_chunks == 2
     assert np.isfinite(np.asarray(q1)).all()
+
+
+def test_observe_report_straggler_moves_split():
+    """The acceptance loop end to end: the chunk-boundary report enters the
+    executor, the injected straggler inflates partition 0's observed
+    seconds (inside observe — the single injection point) and the solved
+    split visibly moves work off the straggler."""
+    solver = make_two_tree_solver(grid=(6, 4, 4), order=2, extent=(2.0, 1.0, 1.0))
+    q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5))
+    ex = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8,
+                                 rebalance_every=2, smoothing=1.0)
+    eng = BlockedDGEngine(solver, ex)
+    c0 = int(ex.counts[0])
+    ex.inject_straggler(0, 8.0)
+    eng.run(q0, 4, observe=True)
+    assert ex.round >= 1
+    assert int(ex.counts[0]) < c0, (c0, ex.counts)
+    assert int(ex.counts.sum()) == 96
+
+
+def test_observe_report_straggler_applied_exactly_once():
+    """run_observed's report carries UNfactored times; observe applies the
+    straggler multipliers — so a measure->observe round counts them exactly
+    once (the executor invariant, now under the in-scan channel)."""
+    solver = make_two_tree_solver(grid=(6, 4, 4), order=2, extent=(2.0, 1.0, 1.0))
+    q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5))
+    ex = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8,
+                                 rebalance_every=0, smoothing=1.0)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    price = np.array([1e-3, 2e-3, 3e-3])
+    ex.inject_straggler(0, 5.0)
+    _, report = pipe.run_observed(q0, 2, price=price, attribute_wall=False)
+    # the channel itself is factor-free...
+    np.testing.assert_allclose(report.step_s, price, rtol=1e-6)
+    ex.observe_chunk(report, 2)
+    # ...and the EWMA carries the factor exactly once
+    np.testing.assert_allclose(ex._ewma, price * np.array([5.0, 1.0, 1.0]),
+                               rtol=1e-6)
+
+
+def test_observe_true_bitwise_identical_to_observe_false():
+    """observe=True (chunked priced programs, mid-run resplices) yields q
+    BITWISE identical to observe=False (one plain program): the priced
+    family performs the same field arithmetic, the accumulator only rides
+    the carry, and resplices preserve the trajectory."""
+    solver = _periodic_solver()
+    K = solver.mesh.K
+    q0 = _rand_state(solver)
+    dt = solver.cfl_dt()
+    ex_a = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid, bucket=8,
+                                   rebalance_every=2, smoothing=1.0)
+    q_plain = np.asarray(BlockedDGEngine(solver, ex_a).run(q0, 6, dt=dt))
+    ex_b = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid, bucket=8,
+                                   rebalance_every=2, smoothing=1.0)
+    q_obs = np.asarray(
+        BlockedDGEngine(solver, ex_b).run(q0, 6, dt=dt, observe=True)
+    )
+    assert (q_plain == q_obs).all(), np.abs(q_plain - q_obs).max()
 
 
 def test_scatter_base_hoisted_across_calls():
@@ -298,23 +360,38 @@ def test_dispatch_count_fused_run_one_per_run():
     assert pipe.stats.dispatches_per_step < 1.0
 
 
-def test_dispatch_count_observe_path_one_per_step():
-    """run(observe=True) steps the fused pipeline one dispatch per step
-    (the executor needs a host boundary to observe at) — and exactly one."""
+def test_dispatch_count_observe_path_one_per_chunk():
+    """run(observe=True) costs exactly ONE dispatch of the priced compiled
+    program per rebalance chunk — never one per step, never a fallback to
+    per-step stepping — counted on the compiled callables themselves."""
     solver = make_two_tree_solver(grid=(6, 4, 4), order=2, extent=(2.0, 1.0, 1.0))
     q0 = gaussian_pulse(solver, center=(0.5, 0.5, 0.5))
     ex = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8,
-                                 rebalance_every=0)
+                                 rebalance_every=2, smoothing=1.0)
     eng = BlockedDGEngine(solver, ex)
     pipe = eng.pipeline()
     sig = pipe.bucket_signature
     step_calls = _wrap_counting(pipe._step_fns, sig, pipe._step_fn(sig))
     run_calls = _wrap_counting(pipe._run_fns, sig, pipe._run_fn(sig))
-    eng.run(q0, 4, observe=True)
-    assert len(step_calls) == 4  # 1 fused dispatch per observed step
-    assert len(run_calls) == 0
-    # the per-step program carries exactly one launch of each kernel
+    priced_calls = _wrap_counting(pipe._priced_run_fns, sig,
+                                  pipe._priced_run_fn(sig))
+    eng.run(q0, 6, observe=True)
+    assert len(priced_calls) == 3  # 6 steps / chunks of 2, by the ledger too
+    assert pipe.stats.observe_chunks == 3 and pipe.stats.steps_run == 6
+    assert len(step_calls) == 0 and len(run_calls) == 0
+    # the priced program carries exactly one launch of each kernel
     assert pipe.stats.kernel_launches == {"volume": 1, "surface": 1}
+    # rebalance_every=0 disables the schedule: the whole horizon is ONE
+    # observed chunk (one dispatch, one report)
+    ex2 = NestedPartitionExecutor(96, 3, grid_dims=(6, 4, 4), bucket=8,
+                                  rebalance_every=0)
+    eng2 = BlockedDGEngine(solver, ex2)
+    pipe2 = eng2.pipeline()
+    sig2 = pipe2.bucket_signature
+    priced2 = _wrap_counting(pipe2._priced_run_fns, sig2,
+                             pipe2._priced_run_fn(sig2))
+    eng2.run(q0, 4, observe=True)
+    assert len(priced2) == 1 and ex2._n_obs == 1
 
 
 # ---------------------------------------------------------------------------
@@ -555,6 +632,40 @@ def test_sharded_pipeline_single_device_mesh():
     assert np.isfinite(np.asarray(qp)).all()
 
 
+def test_sharded_run_observed_in_scan_channel():
+    """ShardedStepPipeline.run_observed on a 1-device mesh: per-shard
+    accumulators psum-reduced inside the program, q bitwise vs the plain
+    fused run, and the deterministic (attribute_wall=False) report carries
+    the price itself; the wall-attributed report sums to positive
+    seconds."""
+    import jax
+
+    from repro.dg.partitioned import PartitionedDG
+
+    solver = _periodic_solver()
+    q0 = _rand_state(solver)
+    dt = solver.cfl_dt()
+    mesh = jax.make_mesh((1,), ("data",))
+    pdg = PartitionedDG(solver=solver, mesh_axes=mesh)
+    pipe = pdg.pipeline()
+    qp = pdg.permute_in(q0)
+    q_plain = np.asarray(pipe.run(qp, 3, dt=dt))
+    price = np.array([2e-3])
+    q_obs, report = pipe.run_observed(qp, 3, dt=dt, price=price,
+                                      attribute_wall=False)
+    assert (np.asarray(q_obs) == q_plain).all()
+    np.testing.assert_allclose(report.step_s, price, rtol=1e-6)
+    q_obs2, report2 = pipe.run_observed(qp, 3, dt=dt)
+    assert (np.asarray(q_obs2) == q_plain).all()
+    assert (np.asarray(report2.step_s) > 0).all()
+    assert pipe.stats.observe_chunks == 2
+    # observe=True through PartitionedDG.run: one report per chunk feeds
+    # the bound executor
+    ex = pdg.bind_executor(pdg.make_executor(rebalance_every=2))
+    q3 = pdg.run(qp, 4, dt=dt, observe=True)
+    assert ex._n_obs == 2 and np.isfinite(np.asarray(q3)).all()
+
+
 def test_fused_run_priced_accumulates_in_scan():
     """run(price=...) returns the same field as the unpriced run plus the
     per-partition cost accumulated inside the compiled loop (price * n)."""
@@ -570,3 +681,31 @@ def test_fused_run_priced_accumulates_in_scan():
     q_priced, acc = pipe.run(q0, 4, dt=dt, price=price)
     assert (np.asarray(q_priced) == q_plain).all()
     np.testing.assert_allclose(np.asarray(acc), price * 4, rtol=1e-12)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.floats(1e-4, 5e-3), min_size=3, max_size=3),
+       st.lists(st.integers(1, 3), min_size=1, max_size=4))
+def test_priced_accumulator_chunking_property(price, chunks):
+    """Property: splitting an observed run into arbitrary rebalance chunks
+    preserves the accumulated totals — the sum over chunks of each chunk's
+    in-scan accumulator equals the per-step sum ``price * n`` and the
+    single-run accumulator (allclose, not bitwise: float addition order
+    differs across chunk boundaries)."""
+    solver = _periodic_solver(grid=(4, 2, 2), order=1)
+    K = solver.mesh.K
+    ex = NestedPartitionExecutor(K, 3, grid_dims=solver.mesh.grid, bucket=4)
+    eng = BlockedDGEngine(solver, ex)
+    pipe = eng.pipeline()
+    q0 = _rand_state(solver)
+    dt = solver.cfl_dt()
+    price = np.asarray(price)
+    n = sum(chunks)
+    total = np.zeros(len(price))
+    q = q0
+    for c in chunks:
+        q, acc = pipe.run(q, c, dt=dt, price=price)
+        total += np.asarray(acc)
+    _, acc_single = pipe.run(q0, n, dt=dt, price=price)
+    np.testing.assert_allclose(total, np.asarray(acc_single), rtol=1e-9)
+    np.testing.assert_allclose(total, price * n, rtol=1e-9)

@@ -253,9 +253,10 @@ def test_engine_protocol_conformance():
         assert out3.shape == q.shape, f"{name} broken after resplice"
 
 
-def test_partitioned_dg_executor_kwarg_deprecated():
-    """The pre-protocol PartitionedDG.run(executor=...) spelling still works
-    for one release but warns."""
+def test_partitioned_dg_executor_kwarg_removed():
+    """The pre-protocol PartitionedDG.run(executor=...) shim expired after
+    its one-release window: the kwarg is gone, and the bind_executor +
+    observe=True spelling is the only one."""
     import jax
     from jax.sharding import Mesh
 
@@ -267,10 +268,52 @@ def test_partitioned_dg_executor_kwarg_deprecated():
     pdg = PartitionedDG(solver, mesh)
     ex = pdg.make_executor(bucket=4, rebalance_every=0)
     q = pdg.permute_in(gaussian_pulse(solver, width=0.25))
-    with pytest.warns(DeprecationWarning, match="bind_executor"):
-        out = pdg.run(q, 2, executor=ex)
+    with pytest.raises(TypeError, match="executor"):
+        pdg.run(q, 2, executor=ex)
+    pdg.bind_executor(ex)
+    out = pdg.run(q, 2, observe=True)
     assert out.shape == q.shape
-    assert pdg._executor is ex  # the shim binds it (new spelling takes over)
+    assert ex._n_obs >= 1  # the in-scan channel fed the bound executor
+
+
+def test_decode_batch_uses_monotonic_clock(served, monkeypatch):
+    """Regression: decode_batch must time with perf_counter, not the
+    non-monotonic wall clock — under a clock that steps BACKWARD (NTP
+    adjustment) its prefill/decode seconds stay non-negative."""
+    import repro.runtime.serving as serving_mod
+
+    import itertools
+
+    cfg, kernels, params = served
+    ticks = itertools.count()
+    monkeypatch.setattr(
+        serving_mod.time, "time", lambda: 1e9 - 10.0 * next(ticks)
+    )
+    rows = np.stack([_trace(cfg, 1, rate=1.0)[0].prompt])
+    _, t_prefill, t_decode = decode_batch(kernels, params, rows, MAX_NEW)
+    assert t_prefill >= 0.0 and t_decode >= 0.0
+
+
+def test_loop_observes_every_decode_chunk(served):
+    """The serving loop feeds the executor one chunk-grained observation
+    per decode chunk (zero extra dispatches), so the calibrate→solve→
+    resplice loop keeps running under load — and the deterministic virtual
+    clock keeps the observations deterministic."""
+    cfg, kernels, params = served
+    trace = _trace(cfg, 4, rate=2.0)
+    loop = ContinuousBatchingLoop(
+        kernels, params, capacity=2, chunk=2, calib_gen=3,
+        report=_report(), slo=SLO(ttft_s=1e9, tok_s=1e9),
+    )
+    summary = loop.run(trace)
+    assert summary.n_done == 4
+    n0 = loop.executor._n_obs
+    assert loop.stats.observe_chunks == loop.n_chunks > 0
+    assert n0 >= loop.n_chunks  # calibration obs + one per chunk
+    assert loop.last_chunk_report is not None
+    assert np.all(np.asarray(loop.last_chunk_report.step_s) >= 0)
+    # still exactly one dispatch per decode chunk — observation is free
+    assert summary.dispatches_per_chunk == 1.0
 
 
 def test_list_scenarios_enumerates_everything():
