@@ -1,0 +1,163 @@
+"""Chaos recovery: what each failure class costs the supervised fused loop.
+
+Runs the same fused ``SimulatedCluster`` horizon under the
+``RunSupervisor`` with one failure class injected per scenario:
+
+* **baseline**    — supervised, failure-free (the reference wall + q);
+* **transient**   — an injected chunk fault absorbed by retry;
+* **restore**     — retries exhausted: checkpoint restore + replay;
+* **straggler_eject** — a 10x straggler flagged by the StepTimer EWMA and
+  ejected (weight -> 0, survivors re-spliced);
+* **node_leave** / **node_join** — elastic membership mid-run.
+
+Per class it reports recovery latency (seconds spent in backoff +
+restore), replayed steps, retries/restarts, makespan overhead vs the
+failure-free run — and the two hard gates CI enforces from
+``BENCH_chaos.json``: ``bitwise_recovered`` (final q identical to the
+uninterrupted run) and ``dispatches_per_chunk == 1.0`` (recovery never
+un-fuses the loop, by the ``DispatchStats`` ledger).
+
+  PYTHONPATH=src python -m benchmarks.run --suite chaos --smoke
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+JSON_PATH = "BENCH_chaos.json"
+
+
+def _solver(grid):
+    from repro.dg.mesh import make_brick
+    from repro.dg.solver import DGSolver
+
+    mesh = make_brick(grid, (1.0, 1.0, 0.5), periodic=True)
+    K = mesh.K
+    return DGSolver(mesh=mesh, order=2, rho=np.ones(K), lam=np.ones(K), mu=np.zeros(K))
+
+
+def run(smoke: bool = False):
+    from repro.runtime import (
+        FailureInjector,
+        NodeProfile,
+        RunSupervisor,
+        SimulatedCluster,
+        StepTimer,
+    )
+
+    grid = (4, 4, 2) if smoke else (6, 6, 4)
+    n_steps = 8 if smoke else 16
+    solver = _solver(grid)
+    rng = np.random.default_rng(0)
+    q0 = jnp.asarray(
+        rng.standard_normal((solver.mesh.K, 9, solver.M, solver.M, solver.M))
+    )
+    dt = solver.cfl_dt()
+
+    def cluster(**kw):
+        return SimulatedCluster(
+            solver, [NodeProfile(name=f"n{i}") for i in range(3)],
+            rebalance_every=2, **kw,
+        )
+
+    # uninterrupted fused reference (the bitwise target for every scenario)
+    q_ref = np.asarray(cluster().run(q0, n_steps, dt=dt, observe=True))
+
+    def scenario(name, make_sup, mutate=None):
+        cl = cluster()
+        sup = make_sup(cl)
+        if mutate is not None:
+            mutate(cl, sup)
+        t0 = time.perf_counter()
+        q = np.asarray(sup.run(q0, n_steps, dt=dt))
+        wall = time.perf_counter() - t0
+        led = sup.ledger()
+        return {
+            "scenario": name,
+            "wall_s": round(wall, 4),
+            "recovery_s": round(sup.recovery_s, 4),
+            "retries": sup.retries,
+            "restarts": sup.restarts,
+            "replayed_steps": sup.replayed_steps,
+            "ejected": list(sup.ejected),
+            "chunks_run": sup.chunks_run,
+            "bitwise_recovered": bool((q == q_ref).all()),
+            "dispatches_per_chunk": (
+                led["dispatches"] / led["chunks_run"] if led["chunks_run"] else 0.0
+            ),
+        }
+
+    results = []
+
+    results.append(scenario("baseline", lambda cl: RunSupervisor(cl)))
+
+    results.append(scenario(
+        "transient",
+        lambda cl: RunSupervisor(
+            cl, max_retries=2,
+            injector=FailureInjector({2: "transient"}),
+        ),
+    ))
+
+    results.append(scenario(
+        "restore",
+        lambda cl: RunSupervisor(
+            cl, max_retries=0, ckpt_every_chunks=1,
+            injector=FailureInjector({4: "node-loss"}),
+        ),
+    ))
+
+    def _straggle(cl, sup):
+        cl.inject_straggler(1, 10.0)
+
+    results.append(scenario(
+        "straggler_eject",
+        lambda cl: RunSupervisor(
+            cl, timer=StepTimer(alpha=1.0, straggler_factor=1.5), eject_after=1,
+        ),
+        mutate=_straggle,
+    ))
+
+    def _leave(cl, sup):
+        sup.at_step(n_steps // 2, lambda: cl.remove_node(1))
+
+    results.append(scenario("node_leave", lambda cl: RunSupervisor(cl), mutate=_leave))
+
+    def _join(cl, sup):
+        from repro.runtime import NodeProfile as NP
+
+        sup.at_step(n_steps // 2, lambda: cl.add_node(NP(name="n3")))
+
+    results.append(scenario("node_join", lambda cl: RunSupervisor(cl), mutate=_join))
+
+    base_wall = results[0]["wall_s"]
+    for r in results:
+        r["makespan_overhead"] = round(r["wall_s"] / base_wall - 1.0, 4) if base_wall else 0.0
+        emit(
+            f"chaos_{r['scenario']}",
+            r["wall_s"] * 1e6,
+            f"bitwise={int(r['bitwise_recovered'])} "
+            f"dpc={r['dispatches_per_chunk']:.2f} "
+            f"recovery_s={r['recovery_s']} replayed={r['replayed_steps']} "
+            f"overhead={r['makespan_overhead']:+.0%}",
+        )
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(
+            {
+                "smoke": smoke, "grid": list(grid), "n_steps": n_steps,
+                "nodes": 3, "scenarios": results,
+            },
+            f, indent=2,
+        )
+    print(f"# wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    run(smoke=True)

@@ -12,6 +12,7 @@ import argparse
 
 def main() -> None:
     from benchmarks import (
+        chaos_recovery,
         fig4_1_kernel_breakdown,
         fig5_2_load_fraction,
         fig5_3_transfer,
@@ -29,6 +30,7 @@ def main() -> None:
         "fig6_2": fig6_2_kernels.run,
         "pipeline": pipeline_throughput.run,
         "serve": serve_latency.run,
+        "chaos": chaos_recovery.run,
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("suites", nargs="*", default=[],

@@ -1,1 +1,1 @@
-from repro.checkpoint.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.checkpoint.checkpoint import CheckpointManager, latest_step, prune, restore, save

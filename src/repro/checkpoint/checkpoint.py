@@ -82,6 +82,22 @@ def save(
     return final
 
 
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    """Drop all but the ``keep`` newest complete checkpoints — the retention
+    half of ``CheckpointManager`` as a standalone helper, for callers that
+    write snapshots through plain ``save`` (e.g. the fault-tolerance
+    supervisor's per-chunk ``(q, step, plan)`` snapshots)."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and os.path.exists(os.path.join(ckpt_dir, n, ".complete"))
+    )
+    for s in steps[: -keep] if keep > 0 else steps:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
@@ -144,13 +160,7 @@ class CheckpointManager:
 
     def _save_and_gc(self, step: int, tree, extra):
         save(self.ckpt_dir, step, tree, extra_meta=extra)
-        steps = sorted(
-            int(n.split("_")[1])
-            for n in os.listdir(self.ckpt_dir)
-            if n.startswith("step_") and os.path.exists(os.path.join(self.ckpt_dir, n, ".complete"))
-        )
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+        prune(self.ckpt_dir, keep=self.keep)
 
     def save(self, step: int, tree, extra_meta: Optional[Dict[str, Any]] = None):
         # snapshot to host BEFORE returning (donated buffers may be reused)

@@ -19,15 +19,20 @@ asymmetric execution lives in ``BlockedDGEngine`` / ``launch.serve``.
 dispatch (batches for the chunk are stacked and scanned over — the training
 twin of the blocked engine's ``FusedStepPipeline``); the supervisor then
 drives chunks, so retries and rebalances happen at chunk granularity.
-``--steps`` must be divisible by N, and step-indexed fault tolerance
-(``--fail-at`` / ``--ckpt-dir``) is refused under fusion because those
-flags are optimizer-step indexed.
+``--steps`` must be divisible by N.  Step-indexed fault tolerance
+(``--fail-at`` / ``--ckpt-dir`` / ``--ckpt-every``) composes with fusion by
+unit conversion: those flags stay optimizer-step indexed (``--fail-at``
+must land on a chunk boundary), checkpoints store optimizer step numbers,
+and the supervisor's chunk counter is translated at the boundary.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
       --steps 20 --fused-steps 5                  # 4 dispatches total
   PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --smoke \
       --steps 30 --fail-at 12 --ckpt-every 5      # exercises restart
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --smoke \
+      --steps 30 --fused-steps 5 --fail-at 10 --ckpt-every 5 \
+      --ckpt-dir /tmp/ck                          # fused restart, same units
 """
 
 from __future__ import annotations
@@ -142,14 +147,11 @@ def main():
     N = max(1, args.fused_steps)
     if args.steps % N:
         raise SystemExit(f"--steps {args.steps} not divisible by --fused-steps {N}")
-    if N > 1 and (args.fail_at is not None or args.ckpt_dir is not None):
-        # the supervisor counts chunks when steps are fused, so step-indexed
-        # failure injection and checkpoint step numbers would silently change
-        # units (a ckpt saved at chunk 4 is optimizer step 4*N) — refuse
-        # rather than misbehave until chunk-granularity FT is wired up
-        raise SystemExit("--fused-steps > 1 is incompatible with --fail-at/"
-                         "--ckpt-dir (checkpoint/failure steps are optimizer-"
-                         "step indexed; fused chunks change the unit)")
+    if N > 1 and args.fail_at is not None and args.fail_at % N:
+        # the supervisor counts chunks when steps are fused; a failure can
+        # only be injected between dispatches, i.e. on a chunk boundary
+        raise SystemExit(f"--fail-at {args.fail_at} must be a multiple of "
+                         f"--fused-steps {N} (failures fire between fused chunks)")
     cfg, shape, lm, jitted, jitted_chunk, accum, micro, dp = build(args)
     key = jax.random.PRNGKey(args.seed)
     params = lm.init(key)
@@ -165,8 +167,11 @@ def main():
         ls = latest_step(args.ckpt_dir)
         if ls is not None:
             (params, opt_state), manifest = ckpt.restore_latest((params, opt_state))
-            start_step = manifest["step"]
-            print(f"restored step {start_step}", flush=True)
+            # checkpoints store OPTIMIZER step numbers; the supervisor loop
+            # counts chunks, so convert at the boundary (ckpts are only
+            # written on chunk boundaries, so this divides exactly)
+            start_step = manifest["step"] // N
+            print(f"restored step {manifest['step']}", flush=True)
 
     metrics_log = []
 
@@ -190,14 +195,16 @@ def main():
         return (params, opt_state), metrics
 
     def save_fn(step, state):
+        # supervisor steps are chunks; persist the optimizer step number so
+        # checkpoints mean the same thing whatever --fused-steps produced them
         if ckpt is not None:
-            ckpt.save(step, state, extra_meta={"arch": cfg.arch_id})
+            ckpt.save(step * N, state, extra_meta={"arch": cfg.arch_id})
 
     def restore_fn():
         if ckpt is None:
             raise RuntimeError("failure without checkpointing enabled")
         (p, o), manifest = ckpt.restore_latest((params, opt_state))
-        return manifest["step"], (p, o)
+        return manifest["step"] // N, (p, o)
 
     def on_metrics(step, metrics, dt, stragglers):
         # under fusion the supervisor step is a chunk: report the optimizer
@@ -224,8 +231,8 @@ def main():
     )
     sup = TrainSupervisor(
         step_fn, batch_fn, save_fn, restore_fn,
-        ckpt_every=args.ckpt_every,
-        injector=FailureInjector({args.fail_at: "node-loss"}) if args.fail_at else None,
+        ckpt_every=max(1, args.ckpt_every // N),
+        injector=FailureInjector({args.fail_at // N: "node-loss"}) if args.fail_at else None,
         on_metrics=on_metrics,
         executor=executor,
     )
@@ -233,7 +240,7 @@ def main():
     final_step, (params, opt_state) = sup.run((params, opt_state), start_step, args.steps // N)
     wall = time.time() - t0
     if ckpt is not None:
-        ckpt.save(final_step, (params, opt_state))
+        ckpt.save(final_step * N, (params, opt_state))
         ckpt.wait()
     losses = [m["loss"] for m in metrics_log]
     print(f"done: steps={final_step * N} dispatches={final_step} wall={wall:.1f}s "

@@ -19,7 +19,15 @@ from repro.runtime.executor import (
     bucket_counts,
 )
 from repro.runtime.cluster import NodeProfile, SimulatedCluster, format_cluster_plan, stampede_profile
-from repro.runtime.fault_tolerance import FailureInjector, StepTimer, TrainSupervisor
+from repro.runtime.elastic import resume_engine, rescale_plan
+from repro.runtime.fault_tolerance import (
+    ChunkTimeout,
+    FailureInjector,
+    InjectedFailure,
+    RunSupervisor,
+    StepTimer,
+    TrainSupervisor,
+)
 from repro.runtime.pipeline import FusedStepPipeline, ShardedStepPipeline
 from repro.runtime.schedule import DispatchStats, StepSchedule
 from repro.runtime.serving import (
@@ -81,8 +89,13 @@ __all__ = [
     "stampede_profile",
     "format_cluster_plan",
     "FailureInjector",
+    "InjectedFailure",
+    "ChunkTimeout",
+    "RunSupervisor",
     "StepTimer",
     "TrainSupervisor",
+    "resume_engine",
+    "rescale_plan",
     "SLO",
     "ContinuousBatchingLoop",
     "ServeKernels",

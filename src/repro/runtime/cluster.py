@@ -110,12 +110,18 @@ class SimulatedCluster:
         rebalance_every: int = 0,
         plan_cache_dir: Optional[str] = None,
         sim_unit_cost: float = 50e-6,
+        injector=None,
     ):
         if len(profiles) == 0:
             raise ValueError("need at least one node profile")
         self.solver = solver
         self.profiles = tuple(profiles)
         self.link = link
+        # chaos hook: a runtime.fault_tolerance.FailureInjector probed once
+        # per node at each fused chunk's dispatch boundary (BEFORE the
+        # device program runs, so a raised failure leaves q and the
+        # executor's schedule untouched and a supervised retry is exact)
+        self.injector = injector
         # seconds per element (at speed 1) for the field-free deterministic
         # simulation — on the same scale as the link model, so the wire
         # genuinely enters the simulated balance
@@ -255,6 +261,13 @@ class SimulatedCluster:
                 chunk = n_steps - done
                 if observe and self.executor.rebalance_every > 0:
                     chunk = min(self.executor.rebalance_every, chunk)
+                if self.injector is not None:
+                    # probe every node's dispatch at the global step this
+                    # chunk starts from (the executor's step counter —
+                    # monotone across supervised per-chunk calls)
+                    base = self.executor._step
+                    for node in range(self.n_nodes):
+                        self.injector.maybe_fail(base, node=node)
                 pipe = self.fused_pipeline()  # after a resplice: new tables
                 q, report = pipe.run_observed(
                     q, chunk, dt=dt,
@@ -388,6 +401,70 @@ class SimulatedCluster:
 
     def clear_stragglers(self) -> None:
         self.executor.clear_stragglers()
+
+    # -- elastic membership ---------------------------------------------------
+
+    def _rebuild_membership(self, profiles: Sequence[NodeProfile],
+                            weights: np.ndarray) -> None:
+        """Swap the control plane for a new fleet: a fresh executor seeded
+        from ``weights`` (spliced through the shared plan cache, so a
+        membership the cache has seen resumes its calibrated split), one
+        ``only_blocks`` engine per node, and a lazily rebuilt fused data
+        plane.  The solver — and with it the jitted kernel bundle and every
+        compiled program keyed on a recurring bucket signature — is shared,
+        so joins/leaves recompile nothing at the kernel level."""
+        old = self.executor
+        cache_root = old.plan_cache.root if old.plan_cache is not None else None
+        self.profiles = tuple(profiles)
+        self.executor = NestedPartitionExecutor(
+            self.solver.mesh.K,
+            len(self.profiles),
+            grid_dims=tuple(self.solver.mesh.grid),
+            bucket=old.bucket,
+            accel_fraction=old.accel_fraction,
+            rebalance_every=old.rebalance_every,
+            initial_weights=np.asarray(weights, dtype=np.float64),
+            plan_cache_dir=cache_root,
+        )
+        self.engines = [
+            BlockedDGEngine(self.solver, self.executor, only_blocks=[i])
+            for i in range(len(self.profiles))
+        ]
+        self._fused_engine = None
+        self.last_sim_times = None
+
+    def add_node(self, profile: NodeProfile, weight: Optional[float] = None) -> int:
+        """A node joins between chunks: re-splice the mesh over N+1 nodes.
+        The joiner's seed weight defaults to its nominal speed on the same
+        scale as the survivors' current counts (so the splice hands it a
+        proportional share immediately; the observe loop refines from
+        there).  Returns the new node's index."""
+        counts = self.executor.counts.astype(np.float64)
+        speeds = np.array([p.speed for p in self.profiles], dtype=np.float64)
+        survivors = np.maximum(counts, 1e-9) if counts.sum() else speeds
+        per_speed = survivors.sum() / max(speeds.sum(), 1e-30)
+        w_new = float(weight) if weight is not None else profile.speed * per_speed
+        self._rebuild_membership(
+            self.profiles + (profile,), np.concatenate([survivors, [w_new]])
+        )
+        return self.n_nodes - 1
+
+    def remove_node(self, index: int) -> None:
+        """A node leaves (preemption, decommission) between chunks: its
+        elements are re-spliced across the survivors, who keep their
+        relative calibrated shares."""
+        index = int(index)
+        if not (0 <= index < self.n_nodes):
+            raise ValueError(f"node {index} out of range")
+        if self.n_nodes == 1:
+            raise RuntimeError("cannot remove the last node")
+        counts = self.executor.counts.astype(np.float64)
+        speeds = np.array([p.speed for p in self.profiles], dtype=np.float64)
+        survivors = np.maximum(counts, 1e-9) if counts.sum() else speeds
+        keep = [i for i in range(self.n_nodes) if i != index]
+        self._rebuild_membership(
+            tuple(self.profiles[i] for i in keep), survivors[keep]
+        )
 
     def run_until_balanced(self, rtol: float = 0.10, max_rounds: int = 8) -> int:
         """Deterministic convergence driver: observe simulated step times

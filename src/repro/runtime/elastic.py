@@ -1,13 +1,23 @@
-"""Elastic rescale: resume training on a different device count.
+"""Elastic rescale: resume a run on a different device count / node fleet.
 
-The pieces are already in place — checkpoints store full logical arrays per
-shard index (checkpoint/), shardings are recomputed from logical axis rules
-for whatever mesh exists (parallel/steps.py), and the deterministic pipeline
-replays batches exactly.  ``rescale_plan`` packages them: given a checkpoint
-and a new mesh, it returns re-sharded (params, opt_state) plus the step to
-resume from.  Tested end-to-end in tests/test_elastic.py: a run trained on
-a (2,2) mesh continues on (4,) and on a single device with a loss trajectory
-equal to an uninterrupted run.
+Two resume paths share the ``repro.checkpoint`` substrate:
+
+* ``rescale_plan`` — the LM-training path.  Checkpoints store full logical
+  arrays per shard index (checkpoint/), shardings are recomputed from
+  logical axis rules for whatever mesh exists (parallel/steps.py), and the
+  deterministic pipeline replays batches exactly: given a checkpoint and a
+  new mesh it returns re-sharded (params, opt_state) plus the step to
+  resume from.  Tested end-to-end in tests/test_elastic.py: a run trained
+  on a (2,2) mesh continues on (4,) and on a single device with a loss
+  trajectory equal to an uninterrupted run.
+
+* ``resume_engine`` — the DG-engine twin.  A ``RunSupervisor`` snapshot is
+  ``(q, step, plan)``; the field update is split-independent (a nested
+  partition is a reordering, never an approximation), so the resuming
+  engine may carry a DIFFERENT partition count or node fleet than the one
+  that saved — the mesh-rescale property lifted from the train loop to the
+  fused engines.  The plan metadata rides along for fleets whose partition
+  count still matches (``NestedPartitionExecutor.restore_state``).
 """
 
 from __future__ import annotations
@@ -19,6 +29,25 @@ import jax
 from repro.checkpoint import restore
 from repro.models.zoo import LM
 from repro.parallel.steps import StepShardings, make_shardings
+
+
+def resume_engine(ckpt_dir: str, executor=None) -> Tuple[Any, int, Dict[str, Any]]:
+    """Load the latest ``RunSupervisor`` snapshot: ``(q, step, plan_meta)``.
+
+    ``q`` is partition-layout independent, so the engine resuming it may
+    have a different node count than the saver (a shrunk or grown fleet).
+    Pass the resuming engine's ``executor`` to also reinstall the plan
+    state when the partition counts line up (a same-shape restart resumes
+    the calibrated split); on a count mismatch only ``q`` is restored and
+    the new fleet keeps its own seed splice.
+    """
+    import jax.numpy as jnp
+
+    tree, manifest = restore(ckpt_dir, {"q": 0})
+    meta = manifest.get("extra", {})
+    if executor is not None and len(meta.get("counts", [])) == executor.n_partitions:
+        executor.restore_state(meta)
+    return jnp.asarray(tree["q"]), int(manifest["step"]), meta
 
 
 def rescale_plan(

@@ -299,6 +299,9 @@ class NestedPartitionExecutor:
         self.neighbors = None if neighbors is None else np.asarray(neighbors, dtype=np.int64)
 
         self._factors = np.ones(self.n_partitions)
+        # ejected partitions are pinned at zero weight by every solve until
+        # readmitted — the fault-tolerance layer's weight->0 ejection
+        self.ejected: set = set()
         self._ewma: Optional[np.ndarray] = None
         self._obs_counts: Optional[np.ndarray] = None
         self._n_obs = 0
@@ -315,12 +318,22 @@ class NestedPartitionExecutor:
         )
         self.weights = w0 / w0.sum()
         self.counts = bucket_counts(np.diff(splice(self.n_items, self.weights)), self.bucket)
-        if self.plan_cache is not None and initial_weights is None:
-            # restart path: resume the last calibrated split instead of naive
-            latest = self.plan_cache.get_latest(self.n_partitions)
-            if latest is not None and int(latest.counts.sum()) == self.n_items:
-                self.weights = latest.weights
-                self.counts = latest.counts.copy()
+        if self.plan_cache is not None:
+            if initial_weights is None:
+                # restart path: resume the last calibrated split, not naive
+                latest = self.plan_cache.get_latest(self.n_partitions)
+                if latest is not None and int(latest.counts.sum()) == self.n_items:
+                    self.weights = latest.weights
+                    self.counts = latest.counts.copy()
+            else:
+                # elastic-membership path: a fleet the cache has seen (same
+                # seed weights, same P) resumes its solved splice directly
+                key = plan_key(self.grid_dims, self.n_items, self.n_partitions,
+                               self.bucket, self.accel_fraction, self.weights)
+                cached = self.plan_cache.get(key, self.n_partitions)
+                if cached is not None and int(cached.counts.sum()) == self.n_items:
+                    self.weights = cached.weights
+                    self.counts = cached.counts.copy()
         self._resplice()
 
     # -- introspection ------------------------------------------------------
@@ -445,8 +458,14 @@ class NestedPartitionExecutor:
     # -- solve / resplice ---------------------------------------------------
 
     def solve(self, weights: Sequence[float]) -> Plan:
-        """Weights -> bucketed counts (plan-cache aware)."""
-        w = np.asarray(weights, dtype=np.float64)
+        """Weights -> bucketed counts (plan-cache aware).  Ejected
+        partitions are pinned at zero weight — the equalizer can never
+        hand work back to a node the fault-tolerance layer removed."""
+        w = np.asarray(weights, dtype=np.float64).copy()
+        if self.ejected:
+            w[sorted(self.ejected)] = 0.0
+        if w.sum() <= 0:
+            raise RuntimeError("no live partitions left to solve over")
         w = w / w.sum()
         key = plan_key(
             self.grid_dims, self.n_items, self.n_partitions, self.bucket,
@@ -555,6 +574,74 @@ class NestedPartitionExecutor:
             self.apply(plan)
         return plan
 
+    # -- ejection / elastic state -------------------------------------------
+
+    def eject(self, partition: int) -> Plan:
+        """Weight -> 0 for ``partition`` and re-splice the survivors — the
+        straggler-ejection primitive.  Every subsequent solve keeps the
+        ejected partition at zero until :meth:`readmit`; the engine side is
+        automatic (a zero-count block builds no tables and joins no
+        launches, so the fused loop stays one dispatch per chunk)."""
+        p = int(partition)
+        if not (0 <= p < self.n_partitions):
+            raise ValueError(f"partition {p} out of range")
+        live = self.n_partitions - len(self.ejected)
+        if p not in self.ejected and live <= 1:
+            raise RuntimeError("cannot eject the last live partition")
+        self.ejected.add(p)
+        self.round += 1
+        plan = dataclasses.replace(self.solve(self.weights), round=self.round)
+        self.apply(plan)
+        return plan
+
+    def readmit(self, partition: int, weight: Optional[float] = None) -> Plan:
+        """Re-splice an ejected partition back in at ``weight`` (default:
+        the live fleet's mean weight) — ejection is not sticky."""
+        p = int(partition)
+        self.ejected.discard(p)
+        w = self.weights.copy()
+        live = w > 0
+        w[p] = float(weight) if weight is not None else (
+            float(w[live].mean()) if live.any() else 1.0
+        )
+        self.round += 1
+        plan = dataclasses.replace(self.solve(w), round=self.round)
+        self.apply(plan)
+        return plan
+
+    def snapshot_state(self) -> dict:
+        """The plan/belief state a checkpointed resplice needs to resume:
+        everything the fault-tolerance layer saves next to ``q``."""
+        return {
+            "weights": self.weights.copy(),
+            "counts": self.counts.copy(),
+            "round": int(self.round),
+            "exec_step": int(self._step),
+            "ejected": sorted(self.ejected),
+            "ewma": None if self._ewma is None else self._ewma.copy(),
+            "obs_counts": None if self._obs_counts is None else self._obs_counts.copy(),
+            "factors": self._factors.copy(),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        """Reinstall a :meth:`snapshot_state` (or the JSON-roundtripped
+        subset a checkpoint manifest carries) and re-splice to its counts."""
+        self.weights = np.asarray(state["weights"], dtype=np.float64)
+        self.counts = np.asarray(state["counts"], dtype=np.int64).copy()
+        self.round = int(state.get("round", self.round))
+        self._step = int(state.get("exec_step", self._step))
+        self.ejected = set(int(p) for p in state.get("ejected", ()))
+        if state.get("ewma") is not None:
+            self._ewma = np.asarray(state["ewma"], dtype=np.float64)
+            self._obs_counts = (
+                np.asarray(state["obs_counts"], dtype=np.float64)
+                if state.get("obs_counts") is not None
+                else self.counts.astype(np.float64)
+            )
+        if state.get("factors") is not None:
+            self._factors = np.asarray(state["factors"], dtype=np.float64)
+        self._resplice()
+
     def maybe_rebalance(self, step: Optional[int] = None) -> Optional[Plan]:
         """Step-driver hook: rebalance every ``rebalance_every`` steps
         (``rebalance_every <= 0`` disables the schedule)."""
@@ -650,6 +737,10 @@ class BlockedDGEngine:
             )
         self.solver = solver
         self.executor = executor
+        # chaos hook: a runtime.fault_tolerance.FailureInjector probed at
+        # each observed chunk's dispatch (inside run_observed, before the
+        # device program runs) — settable after construction
+        self.injector = None
         # restrict this engine to a subset of partitions (a cluster node's
         # engine only ever executes its own block): other entries stay None,
         # so a resplice builds O(1) tables per engine instead of O(P)
@@ -907,7 +998,10 @@ class BlockedDGEngine:
                 # after a resplice the pipeline rebuilds its tables; the
                 # compiled program is reused while the bucket signature
                 # (stable under bucketed counts) recurs
-                q, report = self.pipeline().run_observed(q, chunk, dt=dt)
+                q, report = self.pipeline().run_observed(
+                    q, chunk, dt=dt,
+                    injector=self.injector, step=self.executor._step,
+                )
                 self.executor.observe_chunk(report, chunk)
                 done += chunk
             return q

@@ -1,66 +1,452 @@
-"""Fault tolerance and straggler mitigation for the training loop.
+"""Fault tolerance and elasticity for the fused nested-partition runtime.
 
-Three mechanisms, composable and individually tested:
+Two supervisors share one failure machinery, all timed with
+``time.perf_counter`` (monotonic — an NTP step never reads as a straggler):
 
-* **checkpoint/restart** — the supervisor owns a CheckpointManager; on any
-  step exception it restores the latest complete checkpoint (possibly onto
-  a *different* mesh — elastic) and replays from there.  The deterministic
-  data pipeline guarantees replayed batches are identical.
+* :class:`RunSupervisor` — the fused-engine layer.  Wraps any
+  ``Engine.run(observe=True)`` chunk loop (``BlockedDGEngine``,
+  ``SimulatedCluster``) with
 
-* **straggler detection** — per-step wall times per partition feed an EWMA;
-  a partition slower than ``straggler_factor`` x median is flagged and the
-  paper's equalizer (``rebalance_from_measurements``) computes new work
-  weights.  This is literally section 5.6 run online: a straggler is a
-  device class whose calibrated throughput just dropped.
+  1. **checkpoint/replay** — ``(q, step, plan)`` snapshots through
+     ``repro.checkpoint`` every K rebalance chunks; on an unrecoverable
+     chunk the latest snapshot is restored and replayed.  The field update
+     is split-independent (the partition is a reordering, never an
+     approximation), so the replayed run lands on a final ``q`` bitwise
+     identical to an uninterrupted one even when the replayed plans
+     diverge;
+  2. **retry / timeout / backoff** — transient chunk failures (a
+     :class:`FailureInjector` raising inside the engine's node dispatches,
+     or a chunk overrunning ``chunk_timeout_s``) are retried with
+     exponential backoff before escalating to restore;
+  3. **straggler ejection** — the per-partition EWMA the observe channel
+     already feeds the executor is mirrored into a :class:`StepTimer`; a
+     partition flagged for ``eject_after`` consecutive chunks is ejected
+     (weight -> 0, survivors re-spliced) through
+     ``NestedPartitionExecutor.eject``.  Ejection is not sticky: the timer
+     clears its flag when the EWMA recovers, and ``readmit`` re-splices
+     the node back in;
+  4. **elastic membership** — ``at_step`` schedules arbitrary
+     between-chunk actions (``SimulatedCluster.add_node`` /
+     ``remove_node``), so a node can join or leave mid-run without
+     breaking the fused loop: every chunk stays ONE dispatch, verified by
+     the supervisor's :meth:`ledger` over the pipelines it has driven.
 
-* **step retry** — transient failures (preemption signals, network blips —
-  simulated via FailureInjector) retry the same step up to ``max_retries``
-  before escalating to restore.
+* :class:`TrainSupervisor` — the optimizer-step layer (``launch.train``):
+  retry -> restore -> replay over a deterministic batch pipeline, with an
+  optional online executor riding along.
+
+:class:`FailureInjector` drives both, plus ``SimulatedCluster`` node
+dispatches and ``ContinuousBatchingLoop`` decode chunks: a deterministic
+``{step: kind}`` schedule and/or a seeded per-step Bernoulli draw
+(``seed`` + ``p_fail``) — the probabilistic form is keyed on
+``(seed, step)`` so a given step's verdict is reproducible regardless of
+how many times other steps were probed, and each step fires at most once
+(a retried step succeeds, modelling a transient fault).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.load_balance import rebalance_from_measurements
 
+__all__ = [
+    "InjectedFailure",
+    "ChunkTimeout",
+    "FailureInjector",
+    "StepTimer",
+    "RunSupervisor",
+    "TrainSupervisor",
+]
+
+
+class InjectedFailure(RuntimeError):
+    """A failure raised by :class:`FailureInjector` (carries its class)."""
+
+    def __init__(self, step: int, kind: str, node: Optional[int] = None):
+        self.step = int(step)
+        self.kind = str(kind)
+        self.node = node
+        where = f" on node {node}" if node is not None else ""
+        super().__init__(f"injected failure at step {step}{where}: {kind}")
+
+
+class ChunkTimeout(RuntimeError):
+    """A chunk exceeded the supervisor's ``chunk_timeout_s`` budget."""
+
 
 class FailureInjector:
-    """Deterministic failure schedule for tests: fail step N with exc E."""
+    """Deterministic failure source for chaos tests and benchmarks.
 
-    def __init__(self, schedule: Optional[Dict[int, str]] = None):
+    Two composable schedules, both firing at most once per step:
+
+    * **dict form** (the original API): ``{step: kind}`` raises
+      :class:`InjectedFailure` the first time ``maybe_fail(step)`` is
+      called for that step.  A value may also be ``(kind, node)`` to
+      target one node's dispatch (callers that probe per node pass
+      ``node=``; untargeted entries fire for any node).
+    * **probabilistic form**: ``seed`` + ``p_fail`` draw a Bernoulli
+      verdict per step from ``default_rng((seed, step))`` — deterministic
+      in ``(seed, step)`` alone, so two runs with the same seed inject the
+      identical failure sequence no matter how retries interleave.
+      ``max_failures`` caps the total injected.
+    """
+
+    def __init__(
+        self,
+        schedule: Optional[Dict[int, Any]] = None,
+        *,
+        seed: Optional[int] = None,
+        p_fail: float = 0.0,
+        kind: str = "transient",
+        max_failures: Optional[int] = None,
+    ):
         self.schedule = dict(schedule or {})
-        self.fired = set()
+        self.fired: Set[int] = set()
+        self.seed = seed
+        self.p_fail = float(p_fail)
+        self.kind = str(kind)
+        self.max_failures = max_failures
+        self.injected = 0
 
-    def maybe_fail(self, step: int):
+    def _raise(self, step: int, kind: str, node: Optional[int]) -> None:
+        self.fired.add(step)
+        self.injected += 1
+        raise InjectedFailure(step, kind, node)
+
+    def maybe_fail(self, step: int, node: Optional[int] = None) -> None:
+        step = int(step)
         if step in self.schedule and step not in self.fired:
-            self.fired.add(step)
-            kind = self.schedule[step]
-            raise RuntimeError(f"injected failure at step {step}: {kind}")
+            entry = self.schedule[step]
+            kind, target = entry if isinstance(entry, tuple) else (entry, None)
+            if target is None or node is None or int(target) == int(node):
+                self._raise(step, kind, node)
+        if (
+            self.seed is not None
+            and self.p_fail > 0.0
+            and step not in self.fired
+            and (self.max_failures is None or self.injected < self.max_failures)
+        ):
+            # keyed on (seed, step): the verdict for a step never depends on
+            # how many other steps were probed (or re-probed on retry)
+            draw = np.random.default_rng((int(self.seed), step)).random()
+            if draw < self.p_fail:
+                self._raise(step, self.kind, node)
 
 
 @dataclasses.dataclass
 class StepTimer:
-    """EWMA step timing + straggler flags over named partitions."""
+    """EWMA step timing with hysteretic straggler flags over named keys.
+
+    A key flags when its EWMA exceeds ``straggler_factor`` x the fleet
+    median and *clears* when it drops back under ``recovery_factor`` x the
+    median (default: the same threshold) — flags are not sticky, so an
+    ejected node whose times recover can be readmitted.  ``streak`` counts
+    consecutive flagged updates per key; :meth:`persistent` filters for
+    stragglers that have stayed flagged long enough to act on.
+    """
 
     alpha: float = 0.2
     straggler_factor: float = 1.5
+    recovery_factor: Optional[float] = None
     ewma: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flagged: Set[str] = dataclasses.field(default_factory=set)
+    streak: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def update(self, times: Dict[str, float]) -> List[str]:
+        """Fold in one round of per-key seconds; returns the keys currently
+        flagged (hysteresis applied)."""
         for k, t in times.items():
             prev = self.ewma.get(k)
             self.ewma[k] = t if prev is None else (1 - self.alpha) * prev + self.alpha * t
         med = float(np.median(list(self.ewma.values())))
-        return [k for k, v in self.ewma.items() if med > 0 and v > self.straggler_factor * med]
+        recover = self.straggler_factor if self.recovery_factor is None else self.recovery_factor
+        for k, v in self.ewma.items():
+            if med > 0 and v > self.straggler_factor * med:
+                self.flagged.add(k)
+                self.streak[k] = self.streak.get(k, 0) + 1
+            elif k in self.flagged:
+                if med <= 0 or v <= recover * med:
+                    self.flagged.discard(k)
+                    self.streak[k] = 0
+                else:
+                    self.streak[k] = self.streak.get(k, 0) + 1
+            else:
+                self.streak[k] = 0
+        return [k for k in self.ewma if k in self.flagged]
+
+    def persistent(self, patience: int) -> List[str]:
+        """Keys flagged for at least ``patience`` consecutive updates."""
+        return [k for k in self.ewma if self.streak.get(k, 0) >= int(patience)]
 
     def rebalance(self, counts: Sequence[int], order: Sequence[str]) -> np.ndarray:
         times = [self.ewma[k] for k in order]
         return rebalance_from_measurements(counts, times)
+
+
+# ---------------------------------------------------------------------------
+# RunSupervisor — the fused-engine fault-tolerance layer
+# ---------------------------------------------------------------------------
+
+
+class RunSupervisor:
+    """Drives an ``Engine``'s fused ``run(observe=True)`` loop chunk by
+    chunk with checkpoint/replay, retry/backoff, straggler ejection and
+    between-chunk elasticity (see module docstring).
+
+    The engine must carry a ``NestedPartitionExecutor`` on ``.executor``
+    (``BlockedDGEngine`` and ``SimulatedCluster`` both do; the attribute is
+    re-read every chunk, so engines that rebuild their executor on a
+    membership change keep working).  Chunks are sized by the executor's
+    ``rebalance_every`` — the same boundaries the engine's own observe loop
+    uses, so a supervised run performs the identical per-chunk dispatches
+    as an unsupervised one.
+
+    ``ckpt_dir=None`` keeps snapshots in host memory (tests, benchmarks);
+    a directory persists them through ``repro.checkpoint`` so a *new*
+    process — possibly with a different partition count — can
+    :meth:`resume` (``q`` is split-independent; the plan state is restored
+    only when the partition counts still line up).
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every_chunks: int = 1,
+        keep: int = 3,
+        max_retries: int = 1,
+        backoff_s: float = 0.0,
+        backoff_factor: float = 2.0,
+        chunk_timeout_s: Optional[float] = None,
+        injector: Optional[FailureInjector] = None,
+        timer: Optional[StepTimer] = None,
+        eject_after: int = 0,
+        on_chunk: Optional[Callable[[int, Any], None]] = None,
+    ):
+        self.engine = engine
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every_chunks = int(ckpt_every_chunks)
+        self.keep = int(keep)
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.backoff_factor = float(backoff_factor)
+        self.chunk_timeout_s = chunk_timeout_s
+        self.injector = injector
+        self.timer = timer if timer is not None else StepTimer(alpha=0.5)
+        self.eject_after = int(eject_after)  # 0 disables auto-ejection
+        self.on_chunk = on_chunk
+
+        self.retries = 0
+        self.restarts = 0
+        self.timeouts = 0
+        self.replayed_steps = 0
+        self.chunks_run = 0  # every dispatched chunk, replays included
+        self.recovery_s = 0.0  # wall spent in backoff sleeps + restores
+        self.ejected: List[int] = []
+        self._snapshots: List[Tuple[int, np.ndarray, dict]] = []
+        self._scheduled: List[Tuple[int, Callable[[], None]]] = []
+        self._ledgers: List[Any] = []
+
+    # -- elasticity hooks ---------------------------------------------------
+
+    @property
+    def executor(self):
+        return self.engine.executor
+
+    def at_step(self, step: int, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` to run at the first chunk boundary at or after
+        ``step`` — the elastic-membership hook (``add_node`` /
+        ``remove_node``, straggler injection, SLO changes...)."""
+        self._scheduled.append((int(step), fn))
+        self._scheduled.sort(key=lambda e: e[0])
+
+    def readmit(self, partition: int, weight: Optional[float] = None) -> None:
+        """Undo an ejection: re-splice the node back in (its timer streak
+        restarts from zero)."""
+        self.executor.readmit(partition, weight=weight)
+        if partition in self.ejected:
+            self.ejected.remove(partition)
+        self.timer.streak[str(partition)] = 0
+
+    # -- checkpoint / restore -----------------------------------------------
+
+    def _plan_state(self) -> dict:
+        ex = self.executor
+        return {
+            "counts": [int(c) for c in ex.counts],
+            "weights": [float(w) for w in ex.weights],
+            "round": int(ex.round),
+            "exec_step": int(ex._step),
+            "ejected": sorted(int(p) for p in ex.ejected),
+        }
+
+    def _save(self, step: int, q) -> None:
+        import jax
+
+        q_np = np.asarray(jax.device_get(q))
+        meta = self._plan_state()
+        if self.ckpt_dir is None:
+            self._snapshots.append((int(step), q_np.copy(), meta))
+            del self._snapshots[: -self.keep]
+            return
+        from repro.checkpoint import prune, save
+
+        save(self.ckpt_dir, int(step), {"q": q_np}, extra_meta=meta)
+        prune(self.ckpt_dir, keep=self.keep)
+
+    def _restore(self):
+        """Latest snapshot -> (q, step); re-installs the plan state when the
+        partition count still matches (after a membership change only ``q``
+        is restored — the new fleet keeps its own plan)."""
+        import jax.numpy as jnp
+
+        if self.ckpt_dir is None:
+            if not self._snapshots:
+                raise RuntimeError("restore before any snapshot")
+            step, q_np, meta = self._snapshots[-1]
+        else:
+            from repro.checkpoint import restore
+
+            tree, manifest = restore(self.ckpt_dir, {"q": 0})
+            step, q_np, meta = manifest["step"], np.asarray(tree["q"]), manifest["extra"]
+        ex = self.executor
+        if len(meta.get("counts", [])) == ex.n_partitions:
+            ex.restore_state(meta)
+        return jnp.asarray(q_np), int(step)
+
+    def resume(self) -> Tuple[Any, int]:
+        """Entry point for a NEW process (or a rebuilt engine with a
+        different mesh/node count): load the latest persisted snapshot and
+        return ``(q, step)`` to pass to :meth:`run` as the remaining
+        horizon's start state."""
+        if self.ckpt_dir is None:
+            raise RuntimeError("resume needs a persistent ckpt_dir")
+        return self._restore()
+
+    # -- the supervised chunk loop ------------------------------------------
+
+    def _chunk_size(self, remaining: int, step: int) -> int:
+        """Chunk = the executor's rebalance cadence, clamped so the next
+        ``at_step`` action lands exactly on a chunk boundary (splitting a
+        chunk is bitwise-free: the stage residual resets every step)."""
+        every = int(getattr(self.executor, "rebalance_every", 0) or 0)
+        chunk = min(remaining, every) if every > 0 else remaining
+        if self._scheduled:
+            nxt = int(self._scheduled[0][0])
+            if step < nxt < step + chunk:
+                chunk = nxt - step
+        return chunk
+
+    def _run_scheduled(self, step: int) -> None:
+        while self._scheduled and self._scheduled[0][0] <= step:
+            _, fn = self._scheduled.pop(0)
+            fn()
+
+    def _track_ledger(self) -> None:
+        pipe_fn = getattr(self.engine, "fused_pipeline", None) or getattr(
+            self.engine, "pipeline", None
+        )
+        if pipe_fn is None:
+            return
+        stats = pipe_fn().stats
+        if not any(s is stats for s in self._ledgers):
+            self._ledgers.append(stats)
+
+    def ledger(self) -> dict:
+        """The dispatch ledger across every pipeline this run drove (a
+        membership change swaps pipelines; their stats are summed): recovery
+        must never un-fuse the loop, i.e. ``dispatches == chunks_run`` and
+        ``observe_chunks == chunks_run``."""
+        out = {"chunks_run": self.chunks_run, "dispatches": 0, "observe_chunks": 0,
+               "kernel_launches": {}}
+        for s in self._ledgers:
+            out["dispatches"] += s.dispatches
+            out["observe_chunks"] += s.observe_chunks
+            for k, v in s.kernel_launches.items():
+                out["kernel_launches"][k] = max(out["kernel_launches"].get(k, 0), v)
+        return out
+
+    def _feed_timer(self) -> None:
+        ex = self.executor
+        if ex._ewma is None:
+            return
+        flags = self.timer.update({str(p): float(t) for p, t in enumerate(ex._ewma)})
+        if self.eject_after <= 0 or not flags:
+            return
+        for key in self.timer.persistent(self.eject_after):
+            p = int(key)
+            if p not in ex.ejected and ex.n_partitions - len(ex.ejected) > 1:
+                ex.eject(p)
+                self.ejected.append(p)
+
+    def run(self, q, n_steps: int, dt: Optional[float] = None, *, start_step: int = 0):
+        """Advance ``n_steps`` with full fault tolerance; returns the final
+        ``q`` (bitwise identical to an uninterrupted fused run)."""
+        step = int(start_step)
+        end = step + int(n_steps)
+        chunk_idx = 0
+        self._save(step, q)
+        while step < end:
+            self._run_scheduled(step)
+            chunk = self._chunk_size(end - step, step)
+            attempts = 0
+            delay = self.backoff_s
+            while True:
+                try:
+                    if self.injector is not None:
+                        self.injector.maybe_fail(step)
+                    t0 = time.perf_counter()
+                    q_next = self.engine.run(q, chunk, dt=dt, observe=True, fused=True)
+                    wall = time.perf_counter() - t0
+                    self.chunks_run += 1
+                    self._track_ledger()
+                    if self.chunk_timeout_s is not None and wall > self.chunk_timeout_s:
+                        self.timeouts += 1
+                        raise ChunkTimeout(
+                            f"chunk at step {step} took {wall:.3f}s "
+                            f"(budget {self.chunk_timeout_s:.3f}s)"
+                        )
+                    break
+                except Exception:  # noqa: BLE001 — retry, then restore+replay
+                    t_rec = time.perf_counter()
+                    attempts += 1
+                    if attempts <= self.max_retries:
+                        self.retries += 1
+                        if delay > 0:
+                            time.sleep(delay)
+                            delay *= self.backoff_factor
+                        self.recovery_s += time.perf_counter() - t_rec
+                        continue
+                    self.restarts += 1
+                    q, restored = self._restore()
+                    self.replayed_steps += step - restored
+                    step = restored
+                    chunk = self._chunk_size(end - step, step)
+                    attempts = 0
+                    delay = self.backoff_s
+                    self.recovery_s += time.perf_counter() - t_rec
+            q = q_next
+            step += chunk
+            chunk_idx += 1
+            self._feed_timer()
+            if self.on_chunk is not None:
+                self.on_chunk(step, q)
+            if self.ckpt_every_chunks > 0 and chunk_idx % self.ckpt_every_chunks == 0:
+                self._save(step, q)
+        if self.ckpt_every_chunks > 0:
+            self._save(step, q)  # final state, whatever the cadence
+        return q
+
+
+# ---------------------------------------------------------------------------
+# TrainSupervisor — the optimizer-step layer (launch.train)
+# ---------------------------------------------------------------------------
 
 
 class TrainSupervisor:

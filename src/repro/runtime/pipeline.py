@@ -513,7 +513,8 @@ class FusedStepPipeline:
         return q, acc
 
     def run_observed(self, q, n_steps: int, dt: Optional[float] = None,
-                     price=None, attribute_wall: bool = True):
+                     price=None, attribute_wall: bool = True,
+                     injector=None, step: int = 0):
         """Advance ``n_steps`` as ONE fused dispatch AND observe it: the
         in-scan measurement channel of the calibrate→solve→resplice loop.
 
@@ -532,9 +533,16 @@ class FusedStepPipeline:
 
         Returns ``(q, CalibrationReport)``; straggler factors are NOT in
         the report — ``NestedPartitionExecutor.observe`` applies them, the
-        single injection point."""
+        single injection point.
+
+        ``injector`` (a ``runtime.fault_tolerance.FailureInjector``) is
+        probed at ``step`` BEFORE the dispatch — the chaos hook: a raised
+        failure leaves ``q``, the ledger and the executor schedule
+        untouched, so a supervised retry replays the chunk exactly."""
         import jax
 
+        if injector is not None:
+            injector.maybe_fail(step)
         if price is None:
             price = np.maximum(
                 self.executor.counts.astype(np.float64), 0.0

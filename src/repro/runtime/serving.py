@@ -540,6 +540,8 @@ class ContinuousBatchingLoop:
         report: Optional[CalibrationReport] = None,
         executor: Optional[NestedPartitionExecutor] = None,
         clock: str = "virtual",
+        injector=None,
+        max_retries: int = 1,
     ):
         self.kernels = kernels
         self.params = params
@@ -552,6 +554,14 @@ class ContinuousBatchingLoop:
         self.report = report
         self.executor = executor
         self.clock_kind = clock
+        # chaos hook: a runtime.fault_tolerance.FailureInjector probed at
+        # each decode chunk's dispatch boundary (keyed by chunk index);
+        # transient failures are retried in place up to max_retries — the
+        # chunk has not dispatched yet, so the retry is exact and the loop
+        # stays one dispatch per chunk
+        self.injector = injector
+        self.max_retries = int(max_retries)
+        self.chunk_retries = 0
         self.stats = DispatchStats()  # decode-chunk dispatches only
         self.n_chunks = 0
         self.aux_dispatches = 0  # prefill + splice dispatches (not the scan)
@@ -773,6 +783,17 @@ class ContinuousBatchingLoop:
             # ---- one fused decode chunk ---------------------------------
             if any(r is not None for r in rows):
                 n_live = sum(r is not None for r in rows)
+                if self.injector is not None:
+                    attempts = 0
+                    while True:
+                        try:
+                            self.injector.maybe_fail(self.n_chunks)
+                            break
+                        except Exception:  # noqa: BLE001 — transient chunk fault
+                            attempts += 1
+                            self.chunk_retries += 1
+                            if attempts > self.max_retries:
+                                raise
                 t0_chunk = time.perf_counter()
                 toks, tok, cache = self.kernels.decode_chunk(
                     self.params, (cache, tok), active, self.chunk

@@ -1,8 +1,10 @@
 """Elastic rescale end-to-end: train on one mesh, resume on another.
 
-The loss trajectory of (train 4 steps on mesh A) + (resume 4 steps on mesh
-B) must equal an uninterrupted 8-step run — the checkpoint reshard, the
-sharding recomputation, and the deterministic pipeline must all line up.
+The loss trajectory of (train 4 steps on mesh A, under the fault-tolerant
+supervisor with an injected failure forcing a checkpoint restore) +
+(resume 4 steps on mesh B) must equal an uninterrupted 8-step run — the
+checkpoint reshard, the sharding recomputation, the deterministic
+pipeline AND the supervisor's restore+replay must all line up.
 """
 
 
@@ -11,12 +13,13 @@ def test_elastic_rescale_trajectory(subproc):
         """
 import jax, numpy as np, tempfile, os
 import jax.numpy as jnp
-from repro.checkpoint import save
+from repro.checkpoint import restore as ck_restore, save
 from repro.configs.shapes import ShapeSpec, smoke_config
 from repro.data import make_batch
 from repro.models.zoo import LM, get_config
 from repro.optim import OptConfig, init_opt_state
 from repro.parallel.steps import make_shardings, make_train_step
+from repro.runtime import FailureInjector, TrainSupervisor
 from repro.runtime.elastic import rescale_plan
 from repro.jax_compat import make_mesh
 
@@ -44,11 +47,38 @@ p0 = lm.init(jax.random.PRNGKey(0))
 o0 = init_opt_state(p0)
 _, _, ref = run_steps(mesh_a, p0, o0, 0, 8)
 
-# elastic: 4 steps on (2,2), checkpoint, resume on (4,)
+# elastic: 4 steps on (2,2) THROUGH the fault-tolerant supervisor — an
+# injected failure at step 3 forces restore (from the step-2 checkpoint)
+# + deterministic replay — then checkpoint and resume on (4,)
 p1 = lm.init(jax.random.PRNGKey(0))
 o1 = init_opt_state(p1)
-p1, o1, first = run_steps(mesh_a, p1, o1, 0, 4)
+sh_a = make_shardings(lm, mesh_a, kind="train", accum=True)
+step_a = jax.jit(make_train_step(lm, opt_cfg, sh_a),
+                 in_shardings=(sh_a.params, sh_a.opt, sh_a.batch),
+                 out_shardings=(sh_a.params, sh_a.opt, None))
 ck = tempfile.mkdtemp()
+seen = {}
+
+def step_fn(state, step, batch):
+    p, o, m = step_a(state[0], state[1], batch)
+    return (p, o), m
+
+def restore_fn():
+    state, manifest = ck_restore(ck, (p1, o1))
+    return manifest["step"], state
+
+sup = TrainSupervisor(
+    step_fn,
+    lambda step: make_batch(cfg, shape, step, accum=2, micro=4),
+    lambda step, state: save(ck, step, state),
+    restore_fn,
+    ckpt_every=2, max_retries=0,
+    injector=FailureInjector({3: "preempt"}),
+    on_metrics=lambda s, m, dt, st: seen.__setitem__(s, float(m["loss"])),
+)
+end, (p1, o1) = sup.run((p1, o1), 0, 4)
+assert end == 4 and sup.restarts == 1
+first = [seen[s] for s in range(4)]  # replayed steps overwrite bitwise
 save(ck, 4, (p1, o1))
 p2, o2, step, sh2 = rescale_plan(ck, lm, mesh_b)
 assert step == 4
@@ -56,7 +86,7 @@ assert len(jax.tree.leaves(p2)[0].sharding.device_set) == 4
 _, _, second = run_steps(mesh_b, p2, o2, 4, 4)
 got = first + second
 np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
-print("elastic (2,2)->(4,) trajectory matches uninterrupted run")
+print("elastic (2,2)->(4,) through supervisor restore matches uninterrupted run")
 
 # shrink to a single device
 mesh_c = make_mesh((1,), ("data",))

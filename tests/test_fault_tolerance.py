@@ -1,0 +1,340 @@
+"""Chaos tests for the fault-tolerant elastic runtime (RunSupervisor).
+
+The acceptance invariant, in every scenario: a supervised fused run that
+suffers injected failures, restores, straggler ejections or node
+join/leave lands on a final ``q`` BITWISE identical to an uninterrupted
+fused run — because the field update is split-independent (a nested
+partition is a reordering, never an approximation) and the LSRK stage
+residual resets every step (any chunk boundary is bitwise-safe).  And the
+recovery machinery never un-fuses the loop: the supervisor's dispatch
+ledger stays at exactly one dispatch (one volume + one surface launch) per
+chunk, replays included.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from hypothesis_shim import given, settings, st
+from repro.dg.mesh import make_brick
+from repro.dg.solver import DGSolver
+from repro.runtime import (
+    FailureInjector,
+    InjectedFailure,
+    NodeProfile,
+    RunSupervisor,
+    SimulatedCluster,
+    StepTimer,
+    resume_engine,
+)
+from repro.runtime.executor import BlockedDGEngine, NestedPartitionExecutor
+
+N_STEPS = 8
+
+
+def _solver(grid=(4, 4, 2)):
+    mesh = make_brick(grid, (1.0, 1.0, 0.5), periodic=True)
+    K = mesh.K
+    return DGSolver(mesh=mesh, order=2, rho=np.ones(K), lam=np.ones(K), mu=np.zeros(K))
+
+
+def _rand_state(solver, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((solver.mesh.K, 9, solver.M, solver.M, solver.M))
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """One solver + the uninterrupted fused reference shared by every chaos
+    scenario (bitwise targets; compiles are the expensive part)."""
+    solver = _solver()
+    q0 = _rand_state(solver)
+    dt = solver.cfl_dt()
+    ref_eng = _engine(solver)
+    q_ref = np.asarray(ref_eng.run(q0, N_STEPS, dt=dt, observe=True))
+    return solver, q0, dt, q_ref
+
+
+def _engine(solver, P=3, rebalance_every=2):
+    ex = NestedPartitionExecutor(solver.mesh.K, P, grid_dims=solver.mesh.grid,
+                                 bucket=8, rebalance_every=rebalance_every,
+                                 smoothing=1.0)
+    return BlockedDGEngine(solver, ex)
+
+
+def _cluster(solver, P=3, **kw):
+    return SimulatedCluster(solver, [NodeProfile(name=f"n{i}") for i in range(P)],
+                            rebalance_every=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / replay
+# ---------------------------------------------------------------------------
+
+
+def test_transient_failure_retried_bitwise(setup):
+    """A transient chunk failure is absorbed by retry (no restore) and the
+    final q is bitwise the uninterrupted run's."""
+    solver, q0, dt, q_ref = setup
+    sup = RunSupervisor(_engine(solver), injector=FailureInjector({2: "transient"}),
+                        max_retries=2)
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert sup.retries == 1 and sup.restarts == 0
+
+
+def test_restore_replay_bitwise_in_memory(setup):
+    """With retries exhausted the supervisor restores the last snapshot and
+    replays — still bitwise, exactly one restart."""
+    solver, q0, dt, q_ref = setup
+    sup = RunSupervisor(_engine(solver), injector=FailureInjector({4: "node-loss"}),
+                        max_retries=0, ckpt_every_chunks=1)
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert sup.restarts == 1 and sup.retries == 0
+
+
+def test_restore_replay_bitwise_on_disk(setup, tmp_path):
+    """Same, with snapshots persisted through repro.checkpoint: the replayed
+    steps are accounted, and retention keeps the directory pruned."""
+    from repro.checkpoint import latest_step
+
+    solver, q0, dt, q_ref = setup
+    d = str(tmp_path / "ck")
+    sup = RunSupervisor(_engine(solver), ckpt_dir=d, ckpt_every_chunks=2, keep=2,
+                        injector=FailureInjector({6: "preempt"}), max_retries=0)
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert sup.restarts == 1
+    # failed at step 6, last snapshot at step 4 (every 2 chunks of 2): the
+    # 2 steps in between were replayed
+    assert sup.replayed_steps == 2
+    assert latest_step(d) == N_STEPS
+    import os
+
+    assert sum(n.startswith("step_") for n in os.listdir(d)) <= 2
+
+
+def test_resume_in_new_engine_with_different_partition_count(setup, tmp_path):
+    """The elastic-restart property lifted to the DG engines: a snapshot
+    written by a P=2 fleet is resumed by a P=3 fleet (q is split-
+    independent) and finishes bitwise."""
+    solver, q0, dt, q_ref = setup
+    d = str(tmp_path / "ck")
+    sup_a = RunSupervisor(_engine(solver, P=2), ckpt_dir=d, ckpt_every_chunks=1)
+    sup_a.run(q0, 4, dt=dt)
+
+    eng_b = _engine(solver, P=3)
+    q_mid, step, meta = resume_engine(d, eng_b.executor)
+    assert step == 4 and meta["counts"] and len(meta["counts"]) == 2
+    sup_b = RunSupervisor(eng_b, ckpt_dir=d)
+    q = np.asarray(sup_b.run(q_mid, N_STEPS - step, dt=dt, start_step=step))
+    assert (q == q_ref).all()
+
+
+# ---------------------------------------------------------------------------
+# straggler ejection / readmission
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_ejected_and_work_rehomed(setup):
+    """A persistent straggler (simulated 10x slowdown) is flagged by the
+    StepTimer, ejected (weight -> 0, zero cells) and the survivors absorb
+    its work — with the final q still bitwise."""
+    solver, q0, dt, q_ref = setup
+    cl = _cluster(solver)
+    cl.inject_straggler(1, 10.0)
+    sup = RunSupervisor(cl, timer=StepTimer(alpha=1.0, straggler_factor=1.5),
+                        eject_after=1)
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert sup.ejected == [1]
+    counts = cl.executor.counts
+    assert counts[1] == 0 and counts.sum() == solver.mesh.K
+
+
+def test_ejection_is_not_sticky_readmit_resplices(setup):
+    """readmit() undoes an ejection: the node gets cells again and the run
+    stays bitwise (recovery path of satellite (a))."""
+    solver, q0, dt, q_ref = setup
+    cl = _cluster(solver)
+    cl.inject_straggler(1, 10.0)
+    # eject_after=2 so one stale-EWMA chunk after readmission can't
+    # immediately re-eject while the executor's smoothing decays
+    sup = RunSupervisor(cl, timer=StepTimer(alpha=1.0, straggler_factor=1.5),
+                        eject_after=2)
+    sup.at_step(6, lambda: (cl.clear_stragglers(), sup.readmit(1)))
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert cl.executor.counts[1] > 0 and not cl.executor.ejected
+
+
+def test_eject_never_empties_the_fleet(setup):
+    """The executor refuses to eject the last live partition."""
+    solver, q0, dt, _ = setup
+    cl = _cluster(solver, P=2)
+    cl.executor.eject(0)
+    with pytest.raises(RuntimeError):
+        cl.executor.eject(1)
+
+
+# ---------------------------------------------------------------------------
+# elastic membership
+# ---------------------------------------------------------------------------
+
+
+def test_node_join_and_leave_mid_run_bitwise(setup):
+    """add_node / remove_node between chunks: the fleet grows to 4 then
+    shrinks to 3 mid-run, every chunk stays one dispatch, q is bitwise."""
+    solver, q0, dt, q_ref = setup
+    cl = _cluster(solver)
+    sup = RunSupervisor(cl)
+    sup.at_step(3, lambda: cl.add_node(NodeProfile(name="n3")))
+    sup.at_step(6, lambda: cl.remove_node(1))
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert cl.n_nodes == 3
+    assert cl.executor.counts.sum() == solver.mesh.K
+    led = sup.ledger()
+    assert led["dispatches"] == led["chunks_run"] == sup.chunks_run
+
+
+def test_node_fault_injected_inside_cluster_dispatch(setup):
+    """The injector generalized into SimulatedCluster: a targeted node
+    fault raised at the node's dispatch is retried by the supervisor."""
+    solver, q0, dt, q_ref = setup
+    cl = _cluster(solver, injector=FailureInjector({2: ("transient", 1)}))
+    sup = RunSupervisor(cl, max_retries=2)
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert sup.retries == 1 and cl.injector.injected == 1
+
+
+# ---------------------------------------------------------------------------
+# the dispatch ledger: recovery never un-fuses
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_never_unfuses_the_loop(setup):
+    """After retries, a restore AND a membership change, the ledger still
+    shows exactly one dispatch per chunk run (replays included) and one
+    volume + one surface launch inside each."""
+    solver, q0, dt, q_ref = setup
+    cl = _cluster(solver)
+    sup = RunSupervisor(cl, injector=FailureInjector({4: "node-loss"}), max_retries=0,
+                        ckpt_every_chunks=1)
+    sup.at_step(6, lambda: cl.add_node(NodeProfile(name="n3")))
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    assert sup.restarts == 1
+    led = sup.ledger()
+    assert led["dispatches"] == sup.chunks_run
+    assert led["observe_chunks"] == sup.chunks_run
+    assert led["kernel_launches"] == {"volume": 1, "surface": 1}
+
+
+# ---------------------------------------------------------------------------
+# retry / timeout / backoff mechanics (pure-python fake engine)
+# ---------------------------------------------------------------------------
+
+
+class _FakeExecutor:
+    def __init__(self, rebalance_every=2):
+        self.counts = np.array([4])
+        self.weights = np.array([1.0])
+        self.round = 0
+        self._step = 0
+        self.ejected = set()
+        self._ewma = None
+        self.rebalance_every = rebalance_every
+        self.n_partitions = 1
+
+    def restore_state(self, state):
+        self._step = int(state["exec_step"])
+
+
+class _FakeEngine:
+    """q' = q + n: enough to check the supervisor's control flow exactly."""
+
+    def __init__(self, sleep_first=0.0):
+        self.executor = _FakeExecutor()
+        self.calls = 0
+        self.sleep_first = sleep_first
+
+    def run(self, q, n, dt=None, observe=True, fused=True):
+        self.calls += 1
+        if self.calls == 1 and self.sleep_first:
+            time.sleep(self.sleep_first)
+        self.executor._step += n
+        return q + n
+
+
+def test_chunk_timeout_escalates_to_restore():
+    """A chunk overrunning chunk_timeout_s counts as a failure: retried,
+    then restored — and the replay (fast) completes the run."""
+    eng = _FakeEngine(sleep_first=0.25)
+    sup = RunSupervisor(eng, chunk_timeout_s=0.1, max_retries=0)
+    q = sup.run(0.0, 6)
+    assert q == 6.0
+    assert sup.timeouts >= 1 and sup.restarts >= 1
+
+
+def test_backoff_sleeps_between_retries():
+    eng = _FakeEngine()
+    sup = RunSupervisor(eng, injector=FailureInjector({0: "flaky"}),
+                        max_retries=2, backoff_s=0.01, backoff_factor=2.0)
+    q = sup.run(0.0, 4)
+    assert q == 4.0
+    assert sup.retries == 1 and sup.recovery_s >= 0.01
+
+
+def test_injected_failure_carries_class_and_node():
+    inj = FailureInjector({3: ("preempt", 2)})
+    with pytest.raises(InjectedFailure) as e:
+        inj.maybe_fail(3, node=2)
+    assert e.value.step == 3 and e.value.kind == "preempt" and e.value.node == 2
+    inj.maybe_fail(3, node=2)  # fires at most once per step
+
+
+# ---------------------------------------------------------------------------
+# property: ANY failure/eject/join sequence is bitwise
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    fail_steps=st.lists(st.integers(min_value=0, max_value=N_STEPS - 1),
+                        max_size=2, unique=True),
+    event=st.sampled_from(["none", "join", "leave", "eject"]),
+    persist=st.booleans(),
+)
+def test_any_chaos_sequence_lands_bitwise(setup, tmp_path_factory, fail_steps,
+                                          event, persist):
+    """Fuzz the whole machine: an arbitrary mix of injected chunk failures
+    (forcing restores), a membership event and snapshot persistence must
+    always land on the uninterrupted run's q, with the ledger fused."""
+    solver, q0, dt, q_ref = setup
+    cl = _cluster(solver)
+    kw = {}
+    if persist:
+        kw["ckpt_dir"] = str(tmp_path_factory.mktemp("chaos"))
+    sup = RunSupervisor(cl, injector=FailureInjector({s: "chaos" for s in fail_steps}),
+                        max_retries=0, ckpt_every_chunks=1, **kw)
+    if event == "join":
+        sup.at_step(3, lambda: cl.add_node(NodeProfile(name="nx")))
+    elif event == "leave":
+        sup.at_step(4, lambda: cl.remove_node(1))
+    elif event == "eject":
+        sup.at_step(2, lambda: cl.executor.eject(1))
+    q = np.asarray(sup.run(q0, N_STEPS, dt=dt))
+    assert (q == q_ref).all()
+    # only failures landing on a chunk start are probed (membership events
+    # shift the boundaries), so restarts is bounded, not exact
+    assert sup.restarts <= len(fail_steps)
+    led = sup.ledger()
+    assert led["dispatches"] == sup.chunks_run == led["observe_chunks"]

@@ -77,3 +77,72 @@ def test_rebalance_equalizes_predicted_times():
     thr = counts / times
     predicted = new_counts / thr
     assert abs(predicted[0] - predicted[1]) / predicted.max() < 1e-6
+
+
+def test_injector_dict_form_fires_once_per_step():
+    inj = FailureInjector({5: "preempt"})
+    with pytest.raises(Exception):
+        inj.maybe_fail(5)
+    inj.maybe_fail(5)  # a retried step succeeds: the fault was transient
+    assert inj.injected == 1
+
+
+def test_injector_probabilistic_is_seed_deterministic():
+    """The Bernoulli form is keyed on (seed, step): the same seed injects
+    the identical failure pattern regardless of probe/retry interleaving."""
+
+    def pattern(probe_twice):
+        inj = FailureInjector(seed=11, p_fail=0.25)
+        hits = []
+        for s in range(40):
+            for _ in range(2 if probe_twice else 1):
+                try:
+                    inj.maybe_fail(s)
+                except Exception:
+                    hits.append(s)
+        return hits
+
+    a, b = pattern(False), pattern(True)
+    assert a == b and 0 < len(a) < 40
+    other = FailureInjector(seed=12, p_fail=0.25)
+    hits = []
+    for s in range(40):
+        try:
+            other.maybe_fail(s)
+        except Exception:
+            hits.append(s)
+    assert hits != a  # a different seed draws a different schedule
+
+
+def test_injector_max_failures_caps_injection():
+    inj = FailureInjector(seed=0, p_fail=1.0, max_failures=3)
+    n = 0
+    for s in range(10):
+        try:
+            inj.maybe_fail(s)
+        except Exception:
+            n += 1
+    assert n == 3 and inj.injected == 3
+
+
+def test_steptimer_flags_are_not_sticky():
+    """Hysteresis: a straggler that recovers is unflagged (its streak
+    resets) — the recovery half of the ejection loop."""
+    t = StepTimer(alpha=1.0, straggler_factor=1.4)
+    assert t.update({"n0": 1.0, "n1": 1.0, "n2": 1.0, "n3": 2.0}) == ["n3"]
+    assert t.streak["n3"] == 1
+    assert t.update({"n0": 1.0, "n1": 1.0, "n2": 1.0, "n3": 2.0}) == ["n3"]
+    assert t.persistent(2) == ["n3"]
+    assert t.update({"n0": 1.0, "n1": 1.0, "n2": 1.0, "n3": 1.0}) == []
+    assert t.streak["n3"] == 0 and t.persistent(1) == []
+
+
+def test_steptimer_recovery_factor_hysteresis():
+    """With a recovery_factor below the straggler threshold, a key between
+    the two stays flagged (no flapping at the boundary)."""
+    t = StepTimer(alpha=1.0, straggler_factor=1.5, recovery_factor=1.1)
+    t.update({"a": 1.0, "b": 1.0, "c": 2.0})
+    assert "c" in t.flagged
+    flags = t.update({"a": 1.0, "b": 1.0, "c": 1.3})  # between 1.1x and 1.5x
+    assert flags == ["c"] and t.streak["c"] == 2
+    assert t.update({"a": 1.0, "b": 1.0, "c": 1.0}) == []

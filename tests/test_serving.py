@@ -341,3 +341,41 @@ def test_list_scenarios_enumerates_everything():
     # scenario factories actually build
     sv = resolve_scenario("dg-smoke").build()
     assert sv.mesh.K == 4 * 2 * 2
+
+
+def test_decode_chunk_fault_retried_without_unfusing(served):
+    """A transient fault injected at a decode-chunk boundary is retried in
+    place: the probe fires BEFORE the dispatch, so service is identical to
+    a clean run and the loop stays one dispatch per chunk."""
+    from repro.runtime import FailureInjector
+
+    cfg, kernels, params = served
+
+    def run_loop(injector=None, max_retries=1):
+        loop = ContinuousBatchingLoop(
+            kernels, params, capacity=2, chunk=2, calib_gen=3,
+            report=_report(), slo=SLO(ttft_s=1e9, tok_s=1e9),
+            injector=injector, max_retries=max_retries,
+        )
+        return loop, loop.run(_trace(cfg, 4, rate=2.0))
+
+    loop, faulty = run_loop(FailureInjector({1: "transient"}))
+    assert loop.chunk_retries == 1
+    _, clean = run_loop()
+    assert faulty.to_dict() == clean.to_dict()
+    assert faulty.dispatches_per_chunk == 1.0
+
+
+def test_decode_chunk_fault_escalates_past_max_retries(served):
+    from repro.runtime import FailureInjector
+    from repro.runtime.fault_tolerance import InjectedFailure
+
+    cfg, kernels, params = served
+    loop = ContinuousBatchingLoop(
+        kernels, params, capacity=2, chunk=2, calib_gen=3,
+        report=_report(), slo=SLO(ttft_s=1e9, tok_s=1e9),
+        injector=FailureInjector({0: "node-loss"}),
+        max_retries=0,
+    )
+    with pytest.raises(InjectedFailure):
+        loop.run(_trace(cfg, 4, rate=2.0))
