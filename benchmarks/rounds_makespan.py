@@ -1,0 +1,89 @@
+"""Multi-round re-aggregation makespan benchmark -> BENCH_rounds.json.
+
+Solves :func:`repro.runtime.rounds.plan_rounds` over several heterogeneous
+node mixes and compares the modeled end-to-end makespan against the
+single-round baseline (apportion once over all workers, then the fastest
+worker alone folds every shard).  Multi-round wins when the fleet is wide
+and the skew mild — re-aggregating over a shrinking worker set keeps the
+merge parallel — and loses to a single aggregator when one worker is so
+much faster than the rest that handing it everything after round 1 beats
+any tree (r_best * (n_rounds - 1) > sum of rates).  Both regimes are
+reported; the ``*_hostile`` row is the honest counter-example, and CI
+gates ``speedup > 1`` only on the favourable mixes.
+
+Purely modeled (the round solver is closed-form over calibrated rates), so
+the sweep is deterministic and host-speed independent.
+"""
+
+from __future__ import annotations
+
+import json
+
+JSON_PATH = "BENCH_rounds.json"
+
+# (name, rates, expect_speedup): wide fleets with mild skew favour the
+# round tree; the hostile mix (one 4x node in a small fleet) favours the
+# single aggregator and is kept as a model-honesty regression row
+MIXES = (
+    ("uniform12", [1.0] * 12, True),
+    ("skewed12", [2.0, 2.0, 2.0] + [1.0] * 9, True),
+    ("twotier12", [4 * [2.0] + 8 * [1.0]][0], True),
+    ("hostile8", [4.0, 2.0, 2.0] + [1.0] * 5, False),
+)
+
+
+def run(n_items=4096, shrink=1.6, smoke=False, seed=0):
+    from benchmarks.common import emit
+    from repro.runtime.rounds import RoundWorker, plan_rounds
+
+    if smoke:
+        n_items = 512
+
+    results = []
+    for name, rates, expect in MIXES:
+        workers = [RoundWorker(f"n{i}", r) for i, r in enumerate(rates)]
+        plan = plan_rounds(n_items, workers, shrink=shrink)
+        spans = plan.round_makespans
+        # equal-cost construction: every round's modeled makespan == round 1's
+        assert all(abs(s - spans[0]) < 1e-6 * max(spans[0], 1.0) for s in spans)
+        if expect:
+            assert plan.speedup_vs_single_round > 1.0, (
+                f"{name}: expected multi-round to beat the single aggregator, "
+                f"got x{plan.speedup_vs_single_round:.3f}"
+            )
+        row = {
+            "mix": name,
+            "rates": list(rates),
+            "n_workers": len(rates),
+            "n_items": n_items,
+            "shrink": shrink,
+            "n_rounds": plan.n_rounds,
+            "worker_counts": plan.worker_counts,
+            "round_makespans_s": spans,
+            "makespan_s": plan.makespan,
+            "single_round_makespan_s": plan.single_round_makespan,
+            "speedup_vs_single_round": plan.speedup_vs_single_round,
+        }
+        results.append(row)
+        emit(
+            f"rounds_{name}",
+            plan.makespan * 1e6,
+            f"rounds={plan.n_rounds} workers={plan.worker_counts} "
+            f"single={plan.single_round_makespan * 1e6:.0f}us "
+            f"speedup=x{plan.speedup_vs_single_round:.2f}",
+        )
+
+    result = {
+        "n_items": n_items,
+        "shrink": shrink,
+        "mixes": results,
+        "best_speedup": max(r["speedup_vs_single_round"] for r in results),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(result, f, indent=2, allow_nan=False)
+    print(f"wrote {JSON_PATH}")
+    return result
+
+
+if __name__ == "__main__":
+    run(smoke=True)

@@ -18,6 +18,7 @@ def main() -> None:
         fig5_3_transfer,
         fig6_2_kernels,
         pipeline_throughput,
+        rounds_makespan,
         serve_latency,
         table6_1_speedup,
     )
@@ -30,6 +31,7 @@ def main() -> None:
         "fig6_2": fig6_2_kernels.run,
         "pipeline": pipeline_throughput.run,
         "serve": serve_latency.run,
+        "rounds": rounds_makespan.run,
         "chaos": chaos_recovery.run,
     }
     ap = argparse.ArgumentParser()

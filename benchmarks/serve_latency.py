@@ -91,7 +91,7 @@ def run(arch="qwen2-7b", capacity=4, chunk=4, prompt_len=16, max_new=8,
         "subcapacity_shed_rate": max((r["shed_rate"] for r in sub), default=0.0),
     }
     with open(JSON_PATH, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(result, f, indent=2, allow_nan=False)
     print(f"wrote {JSON_PATH}")
     return result
 

@@ -1,1 +1,8 @@
-from repro.checkpoint.checkpoint import CheckpointManager, latest_step, prune, restore, save
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    comparable_manifest,
+    latest_step,
+    prune,
+    restore,
+    save,
+)

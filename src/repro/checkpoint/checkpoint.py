@@ -50,6 +50,13 @@ def _unflatten_like(template, flat: Dict[str, Any]):
     return jax.tree_util.tree_unflatten(paths[1], leaves)
 
 
+def comparable_manifest(manifest: Dict[str, Any]) -> Dict[str, Any]:
+    """The equality-relevant manifest payload: everything except the save
+    wall timestamp, so two saves of the same state compare identical
+    (manifest-level replay comparison)."""
+    return {k: v for k, v in manifest.items() if k != "time"}
+
+
 def save(
     ckpt_dir: str,
     step: int,
@@ -57,14 +64,24 @@ def save(
     *,
     extra_meta: Optional[Dict[str, Any]] = None,
     process_index: int = 0,
+    timestamp: Optional[float] = None,
 ) -> str:
-    """Write a checkpoint atomically; returns the final directory."""
+    """Write a checkpoint atomically; returns the final directory.
+
+    ``timestamp`` (default: ``time.time()`` at save) is provenance only —
+    it is excluded from :func:`comparable_manifest`, so bitwise-identical
+    states always yield identical comparable manifests."""
     flat = _flatten_with_paths(tree)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + f".tmp{process_index}"
     os.makedirs(tmp, exist_ok=True)
 
-    manifest = {"step": step, "leaves": {}, "extra": extra_meta or {}, "time": time.time()}
+    manifest = {
+        "step": step,
+        "leaves": {},
+        "extra": extra_meta or {},
+        "time": time.time() if timestamp is None else float(timestamp),
+    }
     shards: Dict[str, np.ndarray] = {}
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))

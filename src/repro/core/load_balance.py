@@ -24,9 +24,12 @@ __all__ = [
     "SplitResult",
     "NodeModel",
     "HierarchicalSplit",
+    "RoundSpec",
+    "RoundsResult",
     "solve_two_way",
     "solve_multiway",
     "solve_hierarchical",
+    "solve_rounds",
     "rebalance_from_measurements",
 ]
 
@@ -297,6 +300,133 @@ def solve_hierarchical(
     times = tuple(fns[i](level1.counts[i]) for i in range(len(nodes)))
     return HierarchicalSplit(node_counts=tuple(int(c) for c in level1.counts),
                              node_splits=splits, times=times)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSpec:
+    """One round of a multi-round re-aggregation schedule.
+
+    ``workers`` are indices into the caller's worker list (fastest first —
+    the survivors of the geometric shrink); ``counts``/``times`` align with
+    them.  ``discount`` is the per-item cost multiplier this round runs at:
+    re-aggregating results that earlier rounds already merged is cheaper
+    than first-pass work (partiscontainer's cached comparisons), and the
+    equal-cost sizing *derives* the discount each later, narrower round
+    needs so its makespan equals round 1's.
+    """
+
+    workers: tuple  # worker indices participating this round
+    counts: tuple  # work items per listed worker
+    times: tuple  # modeled seconds per listed worker (discount applied)
+    discount: float  # per-item cost multiplier vs first-pass work
+
+    @property
+    def makespan(self) -> float:
+        return max(self.times) if self.times else 0.0
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.workers)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundsResult:
+    """The full multi-round schedule (see ``solve_rounds``)."""
+
+    rounds: tuple  # RoundSpec per round, round 1 first
+    shrink: float  # nominal per-round worker-count divisor
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def worker_counts(self) -> tuple:
+        return tuple(r.n_workers for r in self.rounds)
+
+    @property
+    def round_makespans(self) -> tuple:
+        return tuple(r.makespan for r in self.rounds)
+
+    @property
+    def makespan(self) -> float:
+        """Total modeled wall time: the rounds run back to back."""
+        return float(sum(r.makespan for r in self.rounds))
+
+
+def solve_rounds(
+    time_fns: Sequence[Callable[[float], float]],
+    K: int,
+    shrink: float = 1.6,
+) -> RoundsResult:
+    """Multi-round re-aggregation sizing (partiscontainer's scheduler shape).
+
+    Round 1 waterfills all ``K`` items across every worker
+    (``solve_multiway`` — counts proportional to calibrated rates, common
+    finish time).  Each later round re-aggregates all ``K`` merged results
+    across ~``1/shrink`` as many workers (the fastest survive) until a
+    single final aggregator remains.  Every round is sized to cost the same
+    modeled wall time as round 1: the narrower fleet is credited with the
+    per-item ``discount`` that equalizes it — the modeled form of "later
+    rounds mostly re-merge already-compared results".  The 1.6 default
+    echoes the paper's K_MIC/K_CPU optimum.
+
+    Like ``solve_hierarchical``, per-worker time models are memoized on
+    ``(worker index, integer count)``: the nested waterfilling bisections
+    re-evaluate nearby k constantly, across every round.
+    """
+    n = len(time_fns)
+    if n == 0:
+        raise ValueError("need at least one worker")
+    if shrink <= 1.0:
+        raise ValueError(f"shrink must be > 1, got {shrink}")
+    K = int(K)
+
+    cache: dict = {}
+
+    def memo(i: int) -> Callable[[float], float]:
+        def T(k: float) -> float:
+            key = (i, int(round(max(0.0, float(k)))))
+            if key not in cache:
+                cache[key] = float(time_fns[i](key[1]))
+            return cache[key]
+
+        return T
+
+    fns = [memo(i) for i in range(n)]
+    # speed ranking (fastest first, index as tie-break) decides survival
+    k_ref = max(1, int(round(K / n)))
+    ranked = sorted(range(n), key=lambda i: (fns[i](k_ref), i))
+
+    def solve_subset(idx: Sequence[int]) -> SplitResult:
+        return solve_multiway([fns[i] for i in idx], K)
+
+    first = solve_subset(ranked)
+    rounds = [
+        RoundSpec(
+            workers=tuple(ranked),
+            counts=tuple(first.counts),
+            times=tuple(first.times),
+            discount=1.0,
+        )
+    ]
+    T1 = first.makespan
+    active = list(ranked)
+    while len(active) > 1:
+        w_next = int(round(len(active) / shrink))
+        w_next = max(1, min(len(active) - 1, w_next))
+        active = active[:w_next]  # fastest survive
+        raw = solve_subset(active)
+        d = T1 / raw.makespan if raw.makespan > 0 else 1.0
+        rounds.append(
+            RoundSpec(
+                workers=tuple(active),
+                counts=tuple(raw.counts),
+                times=tuple(t * d for t in raw.times),
+                discount=d,
+            )
+        )
+    return RoundsResult(rounds=tuple(rounds), shrink=float(shrink))
 
 
 def rebalance_from_measurements(

@@ -101,15 +101,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, full_analysis: bool
              dynamic_trips: Optional[float] = None) -> Dict[str, Any]:
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
-    t0 = time.time()
+    # perf_counter: lower/compile durations must survive NTP clock steps
+    t0 = time.perf_counter()
     jitted, args, mesh, lm = build_cell(arch, shape_name, multi_pod,
                                         grad_sync=grad_sync, fsdp=fsdp, extra_cfg=extra_cfg,
                                         micro_per_device=micro_per_device)
     lowered = jitted.lower(*args)
-    rec["lower_s"] = round(time.time() - t0, 1)
-    t1 = time.time()
+    rec["lower_s"] = round(time.perf_counter() - t0, 1)
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t1, 1)
+    rec["compile_s"] = round(time.perf_counter() - t1, 1)
 
     mem = compiled.memory_analysis()
     # CPU backend exposes these attributes; guard for portability

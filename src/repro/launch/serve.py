@@ -114,12 +114,28 @@ def run_loop(args) -> None:
     slo = None
     if args.slo_ttft is not None or args.slo_tok is not None:
         slo = SLO(ttft_s=args.slo_ttft or 1.0, tok_s=args.slo_tok or 0.05)
+    rounds = None
+    if args.rounds:
+        # heterogeneous decode workers = simulated cluster node groups: the
+        # loop re-aggregates each chunk's token shards across them through
+        # the multi-round plan (one fused dispatch per worker per chunk)
+        from repro.runtime.cluster import NodeProfile
+        from repro.runtime.rounds import workers_from_profiles
+
+        speeds = [float(s) for s in args.round_speeds.split(",") if s]
+        rounds = workers_from_profiles(
+            [NodeProfile(name=f"node{i}", speed=s) for i, s in enumerate(speeds)]
+        )
     loop = ContinuousBatchingLoop(
         kernels, params,
         capacity=args.capacity, chunk=args.chunk,
         partitions=args.partitions, bucket=args.bucket,
         calib_gen=args.calib_gen, slo=slo, clock=args.clock,
+        rounds=rounds, rounds_shrink=args.round_shrink,
     )
+    if loop.rounds_plan is not None:
+        print("round plan (pool rows):")
+        print(loop.rounds_plan.summary())
     # the trace rate is expressed against the calibrated service rate, so
     # calibrate first (on a seed trace's prompts), then price the arrivals
     seed_trace = poisson_trace(
@@ -137,16 +153,19 @@ def run_loop(args) -> None:
           f"clock={args.clock} offered={rate:.2f} req/s")
     for k, v in summary.to_dict().items():
         print(f"  {k}={v}")
-    if summary.dispatches_per_chunk != 1.0:
+    # one fused dispatch per decode chunk — per WORKER shard in rounds mode
+    if summary.dispatches_per_chunk != float(loop.n_round_workers):
         raise SystemExit(
-            f"decode chunk not fused: {summary.dispatches_per_chunk} dispatches/chunk"
+            f"decode chunk not fused: {summary.dispatches_per_chunk} "
+            f"dispatches/chunk for {loop.n_round_workers} worker(s)"
         )
     if args.trace_out:
         loop.write_trace(args.trace_out)
         print(f"wrote {args.trace_out}")
     if args.bench_out:
         with open(args.bench_out, "w") as f:
-            json.dump({"offered_rps": rate, **summary.to_dict()}, f, indent=2)
+            json.dump({"offered_rps": rate, **summary.to_dict()}, f, indent=2,
+                      allow_nan=False)
         print(f"wrote {args.bench_out}")
 
 
@@ -195,6 +214,18 @@ def main():
                          "service rate (used when --rate is 0)")
     ap.add_argument("--clock", default="virtual", choices=["virtual", "wall"],
                     help="virtual = deterministic report-priced clock")
+    ap.add_argument("--rounds", action="store_true",
+                    help="multi-round re-aggregation: shard the row pool "
+                         "across heterogeneous simulated node groups "
+                         "(--round-speeds), one fused decode dispatch per "
+                         "worker per chunk, token shards merged through the "
+                         "shrinking round tree (bitwise the single-"
+                         "aggregator rows)")
+    ap.add_argument("--round-speeds", default="2,1",
+                    help="comma-separated relative node speeds for --rounds")
+    ap.add_argument("--round-shrink", type=float, default=1.6,
+                    help="per-round worker-count divisor (default 1.6, "
+                         "the paper's K_MIC/K_CPU echo)")
     ap.add_argument("--slo-ttft", type=float, default=None,
                     help="time-to-first-token budget, seconds")
     ap.add_argument("--slo-tok", type=float, default=None,

@@ -1,0 +1,279 @@
+"""Batch-system front-end: fan a ``RoundPlan`` out to slurm or sge.
+
+partiscontainer's launcher shape (SNIPPETS §1): the cluster plan becomes one
+job script per (round, worker slot), submitted with cross-round dependencies
+so each re-aggregation round starts only when the previous-round outputs it
+merges exist.  Conventions follow the snippet:
+
+* ``--batch-system {slurm,sge}`` picks the dialect (``sbatch`` +
+  ``#SBATCH`` headers + ``--dependency=afterok``, or ``qsub`` + ``#$``
+  headers + named ``-hold_jid`` holds);
+* per-job stdout/stderr paths are **auto-assigned** under
+  ``<workdir>/logs/`` so round outputs can be located and parsed — do NOT
+  pass ``-e``/``-o`` (or ``--output``/``--error``) through
+  ``--batch-options``, the front-end rejects them;
+* ``--batch-options "..."`` appends extra scheduler directives verbatim
+  (queues, accounts, memory);
+* ``--workdir`` should be on a filesystem every node mounts (NFS) — the
+  plan JSON, scripts, and logs all live under it;
+* ``--dry-run`` prints every script and the submission commands without
+  invoking the batch system (what the CI golden check runs).
+
+Each script's payload is ``python -m repro.runtime.rounds --plan
+<workdir>/plan.json --worker-step R:J`` — the job re-reads the shared plan
+and prints its own assignment, so generated scripts run anywhere the repo
+is importable.
+
+  PYTHONPATH=src python -m repro.launch.submit --batch-system slurm \
+      --workdir /nfs/scratch/rounds --items 4096 --speeds 4,2,1,1 --dry-run
+  PYTHONPATH=src python -m repro.launch.submit --batch-system sge \
+      --workdir /nfs/scratch/rounds --plan-json plan.json \
+      --batch-options "-q long.q -l mem=4G"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shlex
+import shutil
+import subprocess
+import sys
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.rounds import RoundPlan, RoundWorker, plan_rounds
+
+__all__ = [
+    "render_script",
+    "submit_command",
+    "materialize",
+    "main",
+]
+
+BATCH_SYSTEMS = ("slurm", "sge")
+
+# stdout/stderr are OURS to assign (the snippet's rule — sge output paths
+# must be predictable for the merge rounds to find); reject user overrides
+_RESERVED = {
+    "slurm": ("-o", "--output", "-e", "--error"),
+    "sge": ("-o", "-e"),
+}
+
+
+def _check_batch_options(system: str, options: Sequence[str]) -> None:
+    reserved = _RESERVED[system]
+    for opt in options:
+        bare = opt.split("=", 1)[0]
+        if bare in reserved:
+            raise ValueError(
+                f"do not set stdout/stderr locations ({bare}) in "
+                f"--batch-options for {system}: per-job paths are "
+                "auto-assigned under <workdir>/logs/"
+            )
+
+
+def _option_lines(options: Sequence[str]) -> List[str]:
+    """Regroup shlex-split extras into one header line per flag
+    (``["-q", "long.q", "-l", "mem=4G"]`` -> ``["-q long.q", "-l mem=4G"]``)."""
+    lines: List[str] = []
+    for opt in options:
+        if opt.startswith("-") or not lines:
+            lines.append(opt)
+        else:
+            lines[-1] += f" {opt}"
+    return lines
+
+
+def _payload(job: Dict[str, Any], workdir: str) -> str:
+    plan_json = os.path.join(workdir, "plan.json")
+    return (
+        f"{shlex.quote(sys.executable)} -m repro.runtime.rounds "
+        f"--plan {shlex.quote(plan_json)} "
+        f"--worker-step {job['round']}:{job['slot']}"
+    )
+
+
+def render_script(
+    system: str,
+    job: Dict[str, Any],
+    workdir: str,
+    batch_options: Sequence[str] = (),
+) -> str:
+    """One job's script: dialect headers (name, auto stdout/stderr, chdir,
+    extras, sge name-holds) + the worker-step payload."""
+    name = job["name"]
+    out = os.path.join(workdir, "logs", f"{name}.out")
+    err = os.path.join(workdir, "logs", f"{name}.err")
+    lines = ["#!/bin/bash"]
+    if system == "slurm":
+        lines += [
+            f"#SBATCH --job-name={name}",
+            f"#SBATCH --output={out}",
+            f"#SBATCH --error={err}",
+            f"#SBATCH --chdir={workdir}",
+        ]
+        lines += [f"#SBATCH {opt}" for opt in _option_lines(batch_options)]
+    elif system == "sge":
+        lines += [
+            f"#$ -N {name}",
+            f"#$ -o {out}",
+            f"#$ -e {err}",
+            f"#$ -wd {workdir}",
+            "#$ -S /bin/bash",
+        ]
+        if job["depends"]:
+            # sge holds by job NAME: names are unique per plan, and the
+            # submit order (round-major) guarantees they exist when queued
+            lines.append(f"#$ -hold_jid {','.join(job['depends'])}")
+        lines += [f"#$ {opt}" for opt in _option_lines(batch_options)]
+    else:
+        raise ValueError(f"unknown batch system {system!r} (choose from {BATCH_SYSTEMS})")
+    lines += [
+        "",
+        f"# round {job['round']} slot {job['slot']}: worker {job['worker']} "
+        f"(rate {job['rate']:g}/s), {job['count']} items, "
+        f"modeled {job['modeled_s']:.4g}s",
+        _payload(job, workdir),
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def submit_command(
+    system: str,
+    job: Dict[str, Any],
+    script_path: str,
+    job_ids: Dict[str, str],
+) -> List[str]:
+    """The submission argv.  slurm dependencies ride the command line
+    (``--dependency=afterok:<ids>``, resolved from previously submitted
+    rounds — placeholders ``<jobid:name>`` in a dry run); sge holds are
+    baked into the script headers by name."""
+    if system == "slurm":
+        cmd = ["sbatch"]
+        if job["depends"]:
+            ids = ":".join(job_ids.get(d, f"<jobid:{d}>") for d in job["depends"])
+            cmd.append(f"--dependency=afterok:{ids}")
+        return cmd + [script_path]
+    return ["qsub", script_path]
+
+
+def materialize(
+    plan: RoundPlan,
+    system: str,
+    workdir: str,
+    *,
+    batch_options: Sequence[str] = (),
+    dry_run: bool = True,
+    runner=None,
+) -> List[Tuple[Dict[str, Any], str, List[str]]]:
+    """Write ``plan.json`` + every job script under ``workdir`` and submit
+    (or, dry run, just print).  Returns ``(job, script_path, submit_argv)``
+    per job in submission (round-major) order.
+
+    ``runner`` is the submission hook (default: ``subprocess.run``); it
+    must return an object whose ``stdout`` contains the scheduler's
+    response — for slurm the new job id is parsed out of it to thread
+    ``afterok`` dependencies.
+    """
+    if system not in BATCH_SYSTEMS:
+        raise ValueError(f"unknown batch system {system!r} (choose from {BATCH_SYSTEMS})")
+    _check_batch_options(system, batch_options)
+    scripts_dir = os.path.join(workdir, "scripts")
+    os.makedirs(scripts_dir, exist_ok=True)
+    os.makedirs(os.path.join(workdir, "logs"), exist_ok=True)
+    with open(os.path.join(workdir, "plan.json"), "w") as f:
+        json.dump(plan.to_json(), f, indent=1)
+
+    if not dry_run and runner is None:
+        binary = "sbatch" if system == "slurm" else "qsub"
+        if shutil.which(binary) is None:
+            raise RuntimeError(
+                f"{binary} not found on PATH — use --dry-run to inspect the "
+                "scripts without a batch system"
+            )
+        runner = lambda argv: subprocess.run(  # noqa: E731
+            argv, check=True, capture_output=True, text=True
+        )
+
+    job_ids: Dict[str, str] = {}
+    out: List[Tuple[Dict[str, Any], str, List[str]]] = []
+    for job in plan.job_specs():
+        script = render_script(system, job, workdir, batch_options)
+        path = os.path.join(scripts_dir, f"{job['name']}.sh")
+        with open(path, "w") as f:
+            f.write(script)
+        os.chmod(path, 0o755)
+        argv = submit_command(system, job, path, job_ids)
+        if not dry_run:
+            proc = runner(argv)
+            if system == "slurm":
+                # "Submitted batch job 12345"
+                tokens = [t for t in str(proc.stdout).split() if t.isdigit()]
+                job_ids[job["name"]] = tokens[-1] if tokens else job["name"]
+        out.append((job, path, argv))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--batch-system", required=True, choices=BATCH_SYSTEMS)
+    ap.add_argument("--workdir", required=True,
+                    help="plan/scripts/logs root — every node must mount it "
+                         "(NFS) so the merge rounds see each other's output")
+    ap.add_argument("--batch-options", default="",
+                    help="extra scheduler directives, appended verbatim, "
+                         'e.g. "--partition=batch --mem=4G" or "-q long.q" '
+                         "(do NOT set -o/-e: stdout/stderr paths are "
+                         "auto-assigned per job)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print every script + submit command, submit nothing")
+    ap.add_argument("--plan-json", default=None,
+                    help="a serialized RoundPlan (repro.runtime.rounds "
+                         "--plan-out) to materialize")
+    ap.add_argument("--items", type=int, default=None,
+                    help="solve a fresh plan: work-set size")
+    ap.add_argument("--speeds", default=None,
+                    help="solve a fresh plan: comma-separated worker rates")
+    ap.add_argument("--names", default=None,
+                    help="worker names for --speeds (default n0,n1,...)")
+    ap.add_argument("--shrink", type=float, default=1.6,
+                    help="per-round worker-count divisor (default 1.6)")
+    args = ap.parse_args(argv)
+
+    if args.plan_json:
+        with open(args.plan_json) as f:
+            plan = RoundPlan.from_json(json.load(f))
+    elif args.items is not None and args.speeds:
+        speeds = [float(s) for s in args.speeds.split(",") if s]
+        names = (args.names.split(",") if args.names
+                 else [f"n{i}" for i in range(len(speeds))])
+        plan = plan_rounds(args.items,
+                           [RoundWorker(n, s) for n, s in zip(names, speeds)],
+                           shrink=args.shrink)
+    else:
+        ap.error("need --plan-json, or --items with --speeds")
+
+    try:
+        jobs = materialize(
+            plan, args.batch_system, args.workdir,
+            batch_options=shlex.split(args.batch_options),
+            dry_run=args.dry_run,
+        )
+    except (ValueError, RuntimeError) as e:
+        ap.error(str(e))
+
+    print(plan.summary())
+    print(f"{len(jobs)} jobs -> {os.path.join(args.workdir, 'scripts')}")
+    for job, path, argv_ in jobs:
+        print(f"\n# {' '.join(argv_)}")
+        if args.dry_run:
+            with open(path) as f:
+                print(f.read(), end="")
+    if args.dry_run:
+        print("\n(dry run: nothing submitted)")
+
+
+if __name__ == "__main__":
+    main()

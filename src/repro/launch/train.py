@@ -236,9 +236,11 @@ def main():
         on_metrics=on_metrics,
         executor=executor,
     )
-    t0 = time.time()
+    # perf_counter: wall deltas must survive NTP clock steps (same
+    # non-monotonic-clock bug class as the serving decode timer)
+    t0 = time.perf_counter()
     final_step, (params, opt_state) = sup.run((params, opt_state), start_step, args.steps // N)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     if ckpt is not None:
         ckpt.save(final_step * N, (params, opt_state))
         ckpt.wait()

@@ -29,6 +29,15 @@ from repro.runtime.fault_tolerance import (
     TrainSupervisor,
 )
 from repro.runtime.pipeline import FusedStepPipeline, ShardedStepPipeline
+from repro.runtime.rounds import (
+    RoundPlan,
+    RoundWorker,
+    plan_rounds,
+    run_rounds,
+    single_aggregator,
+    workers_from_profiles,
+    workers_from_report,
+)
 from repro.runtime.schedule import DispatchStats, StepSchedule
 from repro.runtime.serving import (
     SLO,
@@ -96,6 +105,13 @@ __all__ = [
     "TrainSupervisor",
     "resume_engine",
     "rescale_plan",
+    "RoundPlan",
+    "RoundWorker",
+    "plan_rounds",
+    "run_rounds",
+    "single_aggregator",
+    "workers_from_profiles",
+    "workers_from_report",
     "SLO",
     "ContinuousBatchingLoop",
     "ServeKernels",

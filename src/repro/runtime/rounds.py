@@ -1,0 +1,381 @@
+"""Multi-round re-aggregation across heterogeneous workers (SNIPPETS §1).
+
+partiscontainer's parallel scheduler splits the work set over every worker
+in round 1, then *merges* the partial results and reapportions them among a
+smaller set of workers — about ``1/1.6x`` as many each round — until a
+single final aggregator holds everything.  Because later rounds mostly
+re-merge results earlier rounds already compared, each round can be sized
+to cost about the same wall time; the 1.6 shrink is an uncanny echo of the
+paper's K_MIC/K_CPU = 1.6 intra-node optimum.
+
+This module is the deterministic planning + merge-execution side of that
+shape on top of ``core.load_balance.solve_rounds``:
+
+* ``RoundWorker`` — one worker with a calibrated throughput (items/s),
+  built from ``NodeProfile`` speeds (``workers_from_profiles``) or from a
+  measured ``CalibrationReport`` (``workers_from_report``);
+* ``plan_rounds`` — emits a ``RoundPlan``: per-round worker subsets,
+  per-worker counts proportional to calibrated rates (equal modeled finish
+  time within a round, equal modeled cost across rounds), plus the
+  single-round-aggregation baseline it is benchmarked against;
+* ``run_rounds`` / ``single_aggregator`` — execute the merge tree over
+  actual per-worker partial results.  The merge callable must be
+  associative (disjoint row/key unions, concatenations): then the
+  multi-round tree is *bitwise* identical to one worker folding every
+  shard, which is what lets the serving loop re-aggregate decode batches
+  through a plan without perturbing a single token.
+
+The plan serializes to JSON (``to_json``/``from_json``) and enumerates
+per-(round, worker) jobs with cross-round dependencies (``job_specs``) —
+the unit ``launch/submit.py`` materializes as slurm/sge scripts.  The
+module is also a tiny CLI: ``python -m repro.runtime.rounds --items 4096
+--speeds 4,2,1,1`` prints a plan (optionally ``--plan-out plan.json``),
+and ``--plan plan.json --worker-step R:J`` prints one job's assignment —
+the payload the generated batch scripts run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.load_balance import RoundSpec, RoundsResult, solve_rounds
+
+__all__ = [
+    "RoundWorker",
+    "RoundPlan",
+    "plan_rounds",
+    "workers_from_profiles",
+    "workers_from_report",
+    "run_rounds",
+    "single_aggregator",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundWorker:
+    """One heterogeneous worker: a name and a calibrated rate (items/s)."""
+
+    name: str
+    rate: float
+
+    def __post_init__(self):
+        if not (self.rate > 0):
+            raise ValueError(f"worker rate must be positive, got {self.rate}")
+
+
+def workers_from_profiles(profiles: Sequence, unit_rate: float = 1.0) -> List[RoundWorker]:
+    """Workers from ``runtime.cluster.NodeProfile``s: rate = speed x
+    ``unit_rate`` (items/s at speed 1.0) — the simulated-cluster knob reused
+    as a round-scheduling throughput."""
+    return [
+        RoundWorker(name=f"{p.name}{i}" if p.name == "node" else p.name,
+                    rate=float(p.speed) * float(unit_rate))
+        for i, p in enumerate(profiles)
+    ]
+
+
+def workers_from_report(report, counts: Sequence[int],
+                        names: Optional[Sequence[str]] = None) -> List[RoundWorker]:
+    """Workers from a measured ``CalibrationReport``: each partition's rate
+    is its calibrated items/s (count / step seconds) — sizing rounds by
+    measured per-class throughput rather than worker count."""
+    step_s = np.asarray(report.step_s, dtype=np.float64)
+    counts = np.asarray(counts, dtype=np.float64)
+    if len(step_s) != len(counts):
+        raise ValueError(f"{len(counts)} counts for {len(step_s)} partitions")
+    alive = step_s > 0
+    rates = np.where(alive, np.maximum(counts, 1.0) / np.where(alive, step_s, 1.0), 0.0)
+    if not alive.all():  # unmeasured partition: fleet-mean prior
+        rates = np.where(alive, rates, rates[alive].mean() if alive.any() else 1.0)
+    return [
+        RoundWorker(name=names[p] if names else f"p{p}", rate=float(rates[p]))
+        for p in range(len(rates))
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """A deterministic multi-round re-aggregation schedule (see module doc).
+
+    ``rounds[0]`` apportions all ``n_items`` across every worker in
+    proportion to calibrated rates; each later round re-aggregates the
+    merged results over the fastest ``~1/shrink`` of the previous fleet at
+    the cost discount that equalizes its makespan with round 1's.
+    ``single_round_makespan`` is the naive baseline: round 1 plus ONE
+    aggregator folding every shard at full first-pass cost.
+    """
+
+    workers: tuple  # RoundWorker, caller's order
+    n_items: int
+    shrink: float
+    rounds: tuple  # core.load_balance.RoundSpec, round 1 first
+    single_round_makespan: float
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def worker_counts(self) -> tuple:
+        return tuple(r.n_workers for r in self.rounds)
+
+    @property
+    def round_makespans(self) -> tuple:
+        return tuple(r.makespan for r in self.rounds)
+
+    @property
+    def makespan(self) -> float:
+        return float(sum(r.makespan for r in self.rounds))
+
+    @property
+    def speedup_vs_single_round(self) -> float:
+        return self.single_round_makespan / self.makespan if self.makespan > 0 else 1.0
+
+    def counts_by_worker(self, r: int = 0) -> np.ndarray:
+        """Round ``r`` item counts indexed by the caller's worker order
+        (non-participants 0) — round 0's is the work apportionment."""
+        out = np.zeros(len(self.workers), dtype=np.int64)
+        spec = self.rounds[r]
+        for w, c in zip(spec.workers, spec.counts):
+            out[w] = int(c)
+        return out
+
+    # -- merge topology ------------------------------------------------------
+
+    def merge_groups(self, r: int) -> List[List[int]]:
+        """Which round-``r-1`` output slots each round-``r`` worker merges.
+
+        Slots are assigned contiguously (preserving worker-rank order, so an
+        associative merge reduces in a fixed global order) and proportionally
+        to the round's counts, with every worker guaranteed at least one
+        slot — the fleet only ever shrinks, so there are always enough.
+        """
+        if r <= 0 or r >= self.n_rounds:
+            raise ValueError(f"merge round must be in [1, {self.n_rounds - 1}], got {r}")
+        n_prev = self.rounds[r - 1].n_workers
+        counts = np.asarray(self.rounds[r].counts, dtype=np.float64)
+        total = counts.sum()
+        shares = counts / total if total > 0 else np.full(len(counts), 1.0 / len(counts))
+        bounds = np.round(np.cumsum(shares) * n_prev).astype(int)
+        bounds[-1] = n_prev
+        # strictly increasing: every merger gets >= 1 source
+        for j in range(len(bounds)):
+            lo = (bounds[j - 1] if j > 0 else 0) + 1
+            hi = n_prev - (len(bounds) - 1 - j)
+            bounds[j] = min(max(bounds[j], lo), hi)
+        groups, lo = [], 0
+        for b in bounds:
+            groups.append(list(range(lo, b)))
+            lo = b
+        return groups
+
+    # -- batch-system jobs ---------------------------------------------------
+
+    def job_specs(self) -> List[Dict[str, Any]]:
+        """One job per (round, worker slot), with cross-round dependencies:
+        a merge job depends on exactly the previous-round jobs whose outputs
+        it folds.  ``name`` is unique and batch-system safe — the unit
+        ``launch/submit.py`` renders as a script."""
+        jobs: List[Dict[str, Any]] = []
+        for r, spec in enumerate(self.rounds):
+            groups = self.merge_groups(r) if r > 0 else [[] for _ in spec.workers]
+            for j, w in enumerate(spec.workers):
+                jobs.append({
+                    "name": f"round{r}_worker{j}",
+                    "round": r,
+                    "slot": j,
+                    "worker": self.workers[w].name,
+                    "rate": self.workers[w].rate,
+                    "count": int(spec.counts[j]),
+                    "modeled_s": float(spec.times[j]),
+                    "depends": [f"round{r - 1}_worker{s}" for s in groups[j]],
+                })
+        return jobs
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "version": 1,
+            "n_items": int(self.n_items),
+            "shrink": float(self.shrink),
+            "workers": [{"name": w.name, "rate": float(w.rate)} for w in self.workers],
+            "rounds": [
+                {
+                    "workers": list(r.workers),
+                    "counts": [int(c) for c in r.counts],
+                    "times": [float(t) for t in r.times],
+                    "discount": float(r.discount),
+                }
+                for r in self.rounds
+            ],
+            "single_round_makespan": float(self.single_round_makespan),
+        }
+
+    @staticmethod
+    def from_json(doc: Dict[str, Any]) -> "RoundPlan":
+        return RoundPlan(
+            workers=tuple(RoundWorker(w["name"], float(w["rate"])) for w in doc["workers"]),
+            n_items=int(doc["n_items"]),
+            shrink=float(doc["shrink"]),
+            rounds=tuple(
+                RoundSpec(
+                    workers=tuple(int(w) for w in r["workers"]),
+                    counts=tuple(int(c) for c in r["counts"]),
+                    times=tuple(float(t) for t in r["times"]),
+                    discount=float(r["discount"]),
+                )
+                for r in doc["rounds"]
+            ),
+            single_round_makespan=float(doc["single_round_makespan"]),
+        )
+
+    def summary(self) -> str:
+        lines = [
+            f"{self.n_items} items over {len(self.workers)} workers, "
+            f"shrink x{self.shrink:g}: {self.n_rounds} rounds, "
+            f"makespan {self.makespan:.4g}s "
+            f"(single-round {self.single_round_makespan:.4g}s, "
+            f"x{self.speedup_vs_single_round:.2f})"
+        ]
+        for r, spec in enumerate(self.rounds):
+            who = ", ".join(
+                f"{self.workers[w].name}={c}" for w, c in zip(spec.workers, spec.counts)
+            )
+            lines.append(
+                f"  round {r}: {spec.n_workers} workers, "
+                f"discount {spec.discount:.3f}, "
+                f"makespan {spec.makespan:.4g}s [{who}]"
+            )
+        return "\n".join(lines)
+
+
+def plan_rounds(n_items: int, workers: Sequence[RoundWorker],
+                shrink: float = 1.6) -> RoundPlan:
+    """Emit the deterministic ``RoundPlan`` for ``n_items`` across
+    ``workers`` (see module doc).  Linear rate models ``t_w(k) = k/rate_w``
+    feed the same waterfilling ``solve_rounds``/``solve_multiway`` path the
+    DG planners use; callers with richer roofline models can run
+    ``solve_rounds`` directly."""
+    workers = list(workers)
+    if not workers:
+        raise ValueError("need at least one worker")
+    n_items = int(n_items)
+    if n_items <= 0:
+        raise ValueError(f"need a positive work set, got {n_items}")
+    fns: List[Callable[[float], float]] = [
+        (lambda k, r=w.rate: float(k) / r) for w in workers
+    ]
+    result: RoundsResult = solve_rounds(fns, n_items, shrink=shrink)
+    # naive baseline: the same round 1, then ONE aggregator folds all
+    # n_items merged results at full first-pass cost (no cached rounds)
+    best = max(w.rate for w in workers)
+    single = result.rounds[0].makespan + n_items / best
+    return RoundPlan(
+        workers=tuple(workers),
+        n_items=n_items,
+        shrink=float(shrink),
+        rounds=result.rounds,
+        single_round_makespan=float(single),
+    )
+
+
+# ---------------------------------------------------------------------------
+# merge execution
+# ---------------------------------------------------------------------------
+
+
+def _fold(merge: Callable[[Any, Any], Any], parts: Sequence[Any]):
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = merge(acc, p)
+    return acc
+
+
+def run_rounds(plan: RoundPlan, shards: Sequence[Any],
+               merge: Callable[[Any, Any], Any]):
+    """Execute the plan's merge tree over round-1 partial results.
+
+    ``shards`` must be ordered by round-1 worker *slot* (``rounds[0]``
+    order); ``merge`` must be associative — contiguous grouping then makes
+    every round's fold a re-bracketing of the same left-to-right reduction,
+    so the result is bitwise what ``single_aggregator`` produces.
+    """
+    if len(shards) != plan.rounds[0].n_workers:
+        raise ValueError(
+            f"{len(shards)} shards for {plan.rounds[0].n_workers} round-1 workers"
+        )
+    parts = list(shards)
+    for r in range(1, plan.n_rounds):
+        parts = [_fold(merge, [parts[s] for s in g]) for g in plan.merge_groups(r)]
+    return _fold(merge, parts)  # no-op fold once the final aggregator holds all
+
+
+def single_aggregator(shards: Sequence[Any], merge: Callable[[Any, Any], Any]):
+    """The baseline: one worker folds every shard left to right."""
+    return _fold(merge, list(shards))
+
+
+# ---------------------------------------------------------------------------
+# CLI — plan printing + the per-job payload the batch scripts run
+# ---------------------------------------------------------------------------
+
+
+def _main(argv: Optional[Sequence[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--items", type=int, default=None, help="work-set size")
+    ap.add_argument("--speeds", default=None,
+                    help="comma-separated relative worker rates, e.g. 4,2,1,1")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated worker names (default n0,n1,...)")
+    ap.add_argument("--shrink", type=float, default=1.6,
+                    help="per-round worker-count divisor (default 1.6)")
+    ap.add_argument("--plan-out", default=None, help="write the plan as JSON")
+    ap.add_argument("--plan", default=None, help="load a plan JSON instead of solving")
+    ap.add_argument("--worker-step", default=None, metavar="R:J",
+                    help="print one job's assignment (round R, slot J) — the "
+                         "payload the generated batch scripts execute")
+    args = ap.parse_args(argv)
+
+    if args.plan:
+        with open(args.plan) as f:
+            plan = RoundPlan.from_json(json.load(f))
+    else:
+        if args.items is None or args.speeds is None:
+            ap.error("need --plan, or --items with --speeds")
+        speeds = [float(s) for s in args.speeds.split(",") if s]
+        names = (args.names.split(",") if args.names
+                 else [f"n{i}" for i in range(len(speeds))])
+        if len(names) != len(speeds):
+            ap.error(f"{len(names)} names for {len(speeds)} speeds")
+        plan = plan_rounds(args.items,
+                           [RoundWorker(n, s) for n, s in zip(names, speeds)],
+                           shrink=args.shrink)
+
+    if args.worker_step:
+        r, j = (int(x) for x in args.worker_step.split(":"))
+        spec = plan.rounds[r]
+        w = plan.workers[spec.workers[j]]
+        srcs = plan.merge_groups(r)[j] if r > 0 else []
+        kind = f"merge outputs of round {r - 1} slots {srcs}" if r else "first-pass work"
+        print(f"round={r} slot={j} worker={w.name} rate={w.rate:g} "
+              f"count={spec.counts[j]} modeled_s={spec.times[j]:.6g} [{kind}]")
+        return
+
+    print(plan.summary())
+    if args.plan_out:
+        with open(args.plan_out, "w") as f:
+            json.dump(plan.to_json(), f, indent=1)
+        print(f"wrote {args.plan_out}")
+
+
+if __name__ == "__main__":
+    _main()

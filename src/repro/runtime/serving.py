@@ -207,6 +207,47 @@ class ServeKernels:
 
         self.splice_rows = splice_rows
 
+        @partial(jax.jit, static_argnums=(3, 4))
+        def gather_rows(cache, tok, active, start, size):
+            """Slice a contiguous row shard [start, start+size) out of the
+            pool state — the per-worker view a rounds-mode decode chunk
+            advances.  Static bounds keep the jit signature set one entry
+            per distinct shard width (the round plan is static)."""
+            sub = {"len": cache["len"][start : start + size]}
+            for key in cache:
+                if key == "len":
+                    continue
+                sub[key] = jax.tree.map(
+                    lambda a: a[:, start : start + size], cache[key]
+                )
+            return sub, tok[start : start + size], active[start : start + size]
+
+        self.gather_rows = gather_rows
+
+        @partial(jax.jit, static_argnums=(4,), donate_argnums=(0, 1))
+        def scatter_rows(cache, tok, sub_cache, sub_tok, start):
+            """Write a worker's advanced shard back over its pool rows
+            (the donated inverse of ``gather_rows``)."""
+            out = {
+                "len": jax.lax.dynamic_update_slice_in_dim(
+                    cache["len"], sub_cache["len"].astype(cache["len"].dtype), start, 0
+                )
+            }
+            for key in cache:
+                if key == "len":
+                    continue
+                out[key] = jax.tree.map(
+                    lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                        a, b.astype(a.dtype), start, 1
+                    ),
+                    cache[key],
+                    sub_cache[key],
+                )
+            tok = jax.lax.dynamic_update_slice_in_dim(tok, sub_tok, start, 0)
+            return out, tok
+
+        self.scatter_rows = scatter_rows
+
     def prefill_rows(self, params, rows: np.ndarray):
         """Prefill a (b, S) int32 prompt block; returns (first_tok, cache)."""
         import jax.numpy as jnp
@@ -498,9 +539,16 @@ class ServeSummary:
     n_chunks: int
     dispatches_per_chunk: float
     total_tokens: int
+    n_round_workers: int = 1  # rounds mode: decode workers per chunk
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        # strict-JSON safe: a fully-shed trace has no percentile samples, and
+        # json.dump would otherwise write its NaNs as the literal ``NaN``
+        # (invalid JSON) — non-finite floats serialize as null instead
+        return {
+            k: (None if isinstance(v, float) and not np.isfinite(v) else v)
+            for k, v in dataclasses.asdict(self).items()
+        }
 
 
 class ContinuousBatchingLoop:
@@ -524,6 +572,18 @@ class ContinuousBatchingLoop:
                       first ``capacity`` trace prompts.
     clock           : "virtual" (deterministic, report-priced — default)
                       or "wall".
+    rounds          : optional heterogeneous decode workers
+                      (``runtime.rounds.RoundWorker``, e.g. from a
+                      ``SimulatedCluster``'s node profiles): the pool's rows
+                      are statically sharded across them in proportion to
+                      calibrated rates (the round plan's round-1
+                      apportionment), every chunk runs ONE fused decode
+                      dispatch per worker shard, and the workers' token
+                      shards are re-aggregated through the plan's multi-round
+                      merge tree — bitwise the single-aggregator rows, with
+                      the virtual clock priced by the plan's modeled
+                      makespan.  ``rounds_shrink`` is the per-round
+                      worker-count divisor (1.6, the paper's echo).
     """
 
     def __init__(
@@ -542,6 +602,8 @@ class ContinuousBatchingLoop:
         clock: str = "virtual",
         injector=None,
         max_retries: int = 1,
+        rounds: Optional[Sequence] = None,
+        rounds_shrink: float = 1.6,
     ):
         self.kernels = kernels
         self.params = params
@@ -571,6 +633,30 @@ class ContinuousBatchingLoop:
         self.requests: List[ServeRequest] = []
         self._calib_counts: Optional[np.ndarray] = None
         self._calib_steps = 1
+
+        # -- multi-round re-aggregation mode -------------------------------
+        self.rounds_workers = list(rounds) if rounds else None
+        self.rounds_shrink = float(rounds_shrink)
+        self.rounds_plan = None
+        self.n_round_workers = 1
+        self._round_slices: List = []
+        if self.rounds_workers:
+            from repro.runtime.rounds import plan_rounds
+
+            # static row shards: the plan's round-1 apportionment of the
+            # pool across workers, contiguous in worker-rank order (so the
+            # merged token shards reassemble in pool-row order)
+            self.rounds_plan = plan_rounds(
+                self.capacity, self.rounds_workers, shrink=self.rounds_shrink
+            )
+            offs = np.concatenate(
+                [[0], np.cumsum(self.rounds_plan.rounds[0].counts)]
+            ).astype(int)
+            self._round_slices = [
+                (int(offs[j]), int(offs[j + 1]))
+                for j in range(self.rounds_plan.rounds[0].n_workers)
+            ]
+            self.n_round_workers = sum(1 for s, e in self._round_slices if e > s)
 
         if self.report is not None:
             # injected report: observe + plan exactly like the measured
@@ -646,6 +732,23 @@ class ContinuousBatchingLoop:
         if len(fns) == 1:
             return fns[0](m) * self.chunk
         return solve_multiway(fns, int(m)).makespan * self.chunk
+
+    def rounds_chunk_seconds(self, m: int) -> float:
+        """Modeled makespan of one chunk under the multi-round plan: the
+        calibrated per-row chunk price (at this occupancy) spread across the
+        heterogeneous workers' relative rates, sized by the same equal-cost
+        ``solve_rounds`` the plan uses — every re-aggregation round is on
+        the clock, not just the parallel round 1."""
+        from repro.core.load_balance import solve_rounds
+
+        if m <= 0:
+            return 0.0
+        per_row = self.modeled_chunk_seconds(m) / m  # speed-1.0 reference
+        fns = [
+            (lambda k, r=w.rate: per_row * float(k) / r)
+            for w in self.rounds_workers
+        ]
+        return solve_rounds(fns, int(m), shrink=self.rounds_shrink).makespan
 
     def modeled_prefill_seconds(self, nb: int) -> float:
         boundary = np.asarray(self.report.boundary_s, dtype=np.float64)
@@ -795,15 +898,54 @@ class ContinuousBatchingLoop:
                             if attempts > self.max_retries:
                                 raise
                 t0_chunk = time.perf_counter()
-                toks, tok, cache = self.kernels.decode_chunk(
-                    self.params, (cache, tok), active, self.chunk
-                )
-                self.stats.record(1, self.chunk)
-                self.kernels.stats.record(1, self.chunk)
-                self.n_chunks += 1
-                jax.block_until_ready(toks)
-                wall_chunk = time.perf_counter() - t0_chunk
-                modeled_chunk = self.modeled_chunk_seconds(n_live)
+                if self.rounds_plan is not None:
+                    # multi-round re-aggregation: ONE fused decode dispatch
+                    # per worker shard (every op is row-independent, so each
+                    # shard's rows are bitwise the full-pool rows), then the
+                    # workers' token shards merge through the plan's
+                    # shrinking round tree — associative column concat,
+                    # bitwise the single-aggregator fold
+                    from repro.runtime.rounds import run_rounds
+
+                    shards, advanced = [], []
+                    for s, e in self._round_slices:
+                        if e <= s:  # worker apportioned zero pool rows
+                            shards.append(np.zeros((self.chunk, 0), np.int32))
+                            continue
+                        sub_cache, sub_tok, sub_active = self.kernels.gather_rows(
+                            cache, tok, active, s, e - s
+                        )
+                        toks_w, tok_w, cache_w = self.kernels.decode_chunk(
+                            self.params, (sub_cache, sub_tok), sub_active, self.chunk
+                        )
+                        self.stats.record(1, self.chunk)
+                        self.kernels.stats.record(1, self.chunk)
+                        shards.append(toks_w)
+                        advanced.append((s, cache_w, tok_w))
+                    for s, cache_w, tok_w in advanced:
+                        cache, tok = self.kernels.scatter_rows(
+                            cache, tok, cache_w, tok_w, s
+                        )
+                    self.n_chunks += 1
+                    jax.block_until_ready(tok)
+                    shards = [np.asarray(t) for t in shards]
+                    toks = run_rounds(
+                        self.rounds_plan,
+                        shards,
+                        lambda a, b: np.concatenate([a, b], axis=1),
+                    )
+                    wall_chunk = time.perf_counter() - t0_chunk
+                    modeled_chunk = self.rounds_chunk_seconds(n_live)
+                else:
+                    toks, tok, cache = self.kernels.decode_chunk(
+                        self.params, (cache, tok), active, self.chunk
+                    )
+                    self.stats.record(1, self.chunk)
+                    self.kernels.stats.record(1, self.chunk)
+                    self.n_chunks += 1
+                    jax.block_until_ready(toks)
+                    wall_chunk = time.perf_counter() - t0_chunk
+                    modeled_chunk = self.modeled_chunk_seconds(n_live)
                 clock.advance(modeled_chunk)
                 t_end = clock.now()
                 # continuous in-loop observation: each decode chunk's
@@ -876,6 +1018,7 @@ class ContinuousBatchingLoop:
             n_chunks=self.n_chunks,
             dispatches_per_chunk=self.stats.dispatches / max(1, self.n_chunks),
             total_tokens=total_tokens,
+            n_round_workers=self.n_round_workers,
         )
 
     def trace_records(self) -> List[Dict[str, Any]]:
@@ -883,5 +1026,7 @@ class ContinuousBatchingLoop:
         return [r.record(slo) for r in self.requests]
 
     def write_trace(self, path: str) -> None:
+        # allow_nan=False gates the strict-JSON guarantee: a non-finite
+        # float reaching a writer is a bug, not a serialization choice
         with open(path, "w") as f:
-            json.dump(self.trace_records(), f, indent=1)
+            json.dump(self.trace_records(), f, indent=1, allow_nan=False)

@@ -72,3 +72,34 @@ print("OK")
 """,
         n_devices=4,
     )
+
+
+def test_same_state_saves_yield_identical_comparable_manifests(tmp_path):
+    """Regression: the save wall timestamp used to be baked into the
+    manifest, so two bitwise-identical checkpoints compared unequal at the
+    manifest level.  The timestamp is provenance only (injectable, excluded
+    from comparable_manifest) — same state must compare identical."""
+    import json
+    import time
+
+    from repro.checkpoint import comparable_manifest
+
+    t = _tree(jax.random.PRNGKey(2))
+    save(str(tmp_path / "a"), 7, t, extra_meta={"seed": 0})
+    time.sleep(0.01)  # distinct wall timestamps
+    save(str(tmp_path / "b"), 7, t, extra_meta={"seed": 0})
+    manifests = []
+    for d in ("a", "b"):
+        with open(tmp_path / d / "step_00000007" / "manifest.json") as f:
+            manifests.append(json.load(f))
+    ma, mb = manifests
+    assert ma["time"] != mb["time"]  # provenance still recorded, and distinct
+    assert ma != mb  # raw manifests differ only by it...
+    assert comparable_manifest(ma) == comparable_manifest(mb)  # ...replay-comparable
+    assert "time" not in comparable_manifest(ma)
+    assert comparable_manifest(ma)["leaves"] and comparable_manifest(ma)["step"] == 7
+
+    # injectable timestamp: replay tooling can pin it for bitwise manifests
+    save(str(tmp_path / "c"), 7, t, extra_meta={"seed": 0}, timestamp=123.5)
+    with open(tmp_path / "c" / "step_00000007" / "manifest.json") as f:
+        assert json.load(f)["time"] == 123.5

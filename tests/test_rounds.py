@@ -1,0 +1,221 @@
+"""Multi-round re-aggregation scheduler tests (runtime/rounds.py +
+core.load_balance.solve_rounds): plan shape, equal-cost rounds, merge-tree
+bitwise identity, serialization, and the batch-job enumeration."""
+
+import json
+
+import numpy as np
+import pytest
+
+from hypothesis_shim import given, settings, st
+
+from repro.core.load_balance import solve_rounds
+from repro.runtime.rounds import (
+    RoundPlan,
+    RoundWorker,
+    plan_rounds,
+    run_rounds,
+    single_aggregator,
+    workers_from_profiles,
+    workers_from_report,
+)
+
+
+def _workers(rates):
+    return [RoundWorker(f"n{i}", r) for i, r in enumerate(rates)]
+
+
+def _rates(seed, n):
+    g = np.random.default_rng(seed)
+    return (10.0 ** g.uniform(-1, 1, n)).tolist()
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis, degrading to skip without it)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 10_000), st.floats(1.05, 4.0),
+       st.integers(0, 2**31 - 1))
+def test_worker_counts_shrink_geometrically(n, k, shrink, seed):
+    """Each round runs max(1, min(prev-1, round(prev/shrink))) workers, so
+    the fleet shrinks geometrically to exactly one final aggregator."""
+    plan = plan_rounds(k, _workers(_rates(seed, n)), shrink=shrink)
+    wc = plan.worker_counts
+    assert wc[0] == n and wc[-1] == 1
+    for a, b in zip(wc, wc[1:]):
+        assert b == max(1, min(a - 1, int(round(a / shrink))))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 10_000), st.floats(1.05, 4.0),
+       st.integers(0, 2**31 - 1))
+def test_every_round_costs_the_same(n, k, shrink, seed):
+    """The cache-credit discount is chosen so every round's modeled makespan
+    equals round 1's — the partiscontainer sizing rule, by construction."""
+    plan = plan_rounds(k, _workers(_rates(seed, n)), shrink=shrink)
+    t1 = plan.round_makespans[0]
+    for t in plan.round_makespans:
+        assert t == pytest.approx(t1, rel=1e-9)
+    assert plan.makespan == pytest.approx(t1 * plan.n_rounds, rel=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 10_000), st.floats(0.1, 10.0))
+def test_equal_throughput_workers_split_evenly(n, k, rate):
+    """Degenerate case: identical rates must apportion round 1 as evenly as
+    integer counts allow (max spread 1 item)."""
+    plan = plan_rounds(k, _workers([rate] * n))
+    counts = plan.counts_by_worker(0)
+    assert int(counts.sum()) == k
+    assert counts.max() - counts.min() <= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 16), st.integers(2, 9), st.floats(1.05, 4.0),
+       st.integers(0, 2**31 - 1))
+def test_merge_tree_bitwise_matches_single_aggregator(n, width, shrink, seed):
+    """An associative merge through the round tree re-brackets the same
+    left-to-right fold, so the result is BITWISE the single-aggregator one
+    — the invariant the serving loop's --rounds mode rides on."""
+    g = np.random.default_rng(seed)
+    plan = plan_rounds(max(n, 1) * 7, _workers(_rates(seed, n)), shrink=shrink)
+    shards = [g.standard_normal((g.integers(0, 4), width)) for _ in range(n)]
+    merge = lambda a, b: np.concatenate([a, b], axis=0)  # noqa: E731
+    tree = run_rounds(plan, shards, merge)
+    flat = single_aggregator(shards, merge)
+    assert tree.dtype == flat.dtype and tree.shape == flat.shape
+    assert np.array_equal(tree, flat)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 10_000), st.integers(0, 2**31 - 1))
+def test_plan_json_roundtrip(n, k, seed):
+    plan = plan_rounds(k, _workers(_rates(seed, n)))
+    doc = json.loads(json.dumps(plan.to_json(), allow_nan=False))
+    assert RoundPlan.from_json(doc) == plan
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 20), st.integers(1, 10_000), st.integers(0, 2**31 - 1))
+def test_job_specs_dependency_closure(n, k, seed):
+    """Every merge job depends on previous-round jobs that exist, and each
+    round's dependency groups partition the previous round's slots — no
+    shard is dropped or folded twice."""
+    plan = plan_rounds(k, _workers(_rates(seed, n)))
+    jobs = plan.job_specs()
+    names = {j["name"] for j in jobs}
+    assert len(names) == len(jobs)
+    for j in jobs:
+        assert (j["round"] == 0) == (not j["depends"])
+        assert all(d in names for d in j["depends"])
+    for r in range(1, plan.n_rounds):
+        merged = sorted(
+            s for j in jobs if j["round"] == r
+            for s in (int(d.rsplit("worker", 1)[1]) for d in j["depends"])
+        )
+        assert merged == list(range(plan.rounds[r - 1].n_workers))
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit tests (no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+
+def test_round1_counts_proportional_to_rates():
+    plan = plan_rounds(800, _workers([4.0, 2.0, 1.0, 1.0]))
+    counts = plan.counts_by_worker(0)
+    assert int(counts.sum()) == 800
+    assert counts.tolist() == [400, 200, 100, 100]
+    # equal modeled finish time within the round
+    times = plan.rounds[0].times
+    assert max(times) == pytest.approx(min(times), rel=1e-9)
+
+
+def test_survivors_are_the_fastest_workers():
+    """Later rounds keep the fastest prefix: the slow tail drops first and
+    the final aggregator is the single fastest worker."""
+    plan = plan_rounds(640, _workers([1.0, 8.0, 2.0, 4.0, 0.5]))
+    final = plan.rounds[-1]
+    assert final.n_workers == 1
+    assert plan.workers[final.workers[0]].rate == 8.0
+    for prev, cur in zip(plan.rounds, plan.rounds[1:]):
+        assert set(cur.workers) <= set(prev.workers)
+
+
+def test_merge_groups_cover_and_never_starve():
+    plan = plan_rounds(4096, _workers([16.0] + [1.0] * 11))
+    for r in range(1, plan.n_rounds):
+        groups = plan.merge_groups(r)
+        assert all(len(g) >= 1 for g in groups)
+        flat = [s for g in groups for s in g]
+        assert flat == list(range(plan.rounds[r - 1].n_workers))
+
+
+def test_single_worker_plan_is_one_round():
+    plan = plan_rounds(100, _workers([3.0]))
+    assert plan.n_rounds == 1 and plan.worker_counts == (1,)
+    assert plan.makespan == pytest.approx(100 / 3.0)
+    out = run_rounds(plan, [np.arange(5)], lambda a, b: np.concatenate([a, b]))
+    assert np.array_equal(out, np.arange(5))
+
+
+def test_wide_mild_skew_beats_single_aggregator():
+    """The acceptance mix: a wide fleet with mild skew must model faster
+    through the round tree than one aggregator folding everything."""
+    for rates in ([1.0] * 12, [2.0, 2.0, 2.0] + [1.0] * 9, [2.0] * 4 + [1.0] * 8):
+        plan = plan_rounds(4096, _workers(rates))
+        assert plan.speedup_vs_single_round > 1.0, rates
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        plan_rounds(100, [])
+    with pytest.raises(ValueError):
+        plan_rounds(0, _workers([1.0]))
+    with pytest.raises(ValueError):
+        RoundWorker("w", 0.0)
+    with pytest.raises(ValueError):
+        solve_rounds([lambda k: k], 10, shrink=1.0)
+    plan = plan_rounds(10, _workers([1.0, 1.0]))
+    with pytest.raises(ValueError):
+        run_rounds(plan, [np.zeros(1)], lambda a, b: a)
+    with pytest.raises(ValueError):
+        plan.merge_groups(0)
+
+
+def test_solve_rounds_memoizes_time_models():
+    """Each (worker, count) evaluation hits the wrapped model once — the
+    solve_hierarchical memo pattern applied to the round solver."""
+    calls = [[], []]
+
+    def make(i):
+        def t(k):
+            calls[i].append(int(round(k)))
+            return float(k) * 1e-3
+
+        return t
+
+    solve_rounds([make(0), make(1)], 1000)
+    for per_worker in calls:
+        assert len(per_worker) == len(set(per_worker))
+
+
+def test_workers_from_profiles_and_report():
+    from repro.runtime.cluster import NodeProfile
+
+    ws = workers_from_profiles(
+        [NodeProfile(name="node", speed=2.0), NodeProfile(name="node", speed=1.0)],
+        unit_rate=10.0,
+    )
+    assert [w.name for w in ws] == ["node0", "node1"]
+    assert [w.rate for w in ws] == [20.0, 10.0]
+
+    class FakeReport:
+        step_s = [0.1, 0.2, 0.0]  # partition 2 never measured
+
+    ws = workers_from_report(FakeReport(), [10, 10, 10])
+    assert ws[0].rate == pytest.approx(100.0)
+    assert ws[1].rate == pytest.approx(50.0)
+    assert ws[2].rate == pytest.approx((100.0 + 50.0) / 2)  # fleet-mean prior

@@ -188,6 +188,78 @@ def test_trace_records_roundtrip(served, tmp_path):
     assert {"rid", "state", "ttft_s", "latency_s", "n_tokens"} <= set(rows[0])
 
 
+def test_rounds_loop_bitwise_and_ledgered(served):
+    """--rounds acceptance bar: the row pool sharded across heterogeneous
+    node groups and re-aggregated through the multi-round merge tree yields
+    token rows BITWISE identical to the plain single-aggregator loop, at
+    exactly one fused dispatch per worker per chunk (DispatchStats-gated),
+    deterministic under the virtual clock."""
+    from repro.runtime.cluster import NodeProfile
+    from repro.runtime.rounds import workers_from_profiles
+
+    cfg, kernels, params = served
+    workers = workers_from_profiles(
+        [NodeProfile(name="node", speed=2.0), NodeProfile(name="node", speed=1.0)]
+    )
+
+    def run_with(rounds):
+        trace = _trace(cfg, 6, rate=2.0)
+        loop = ContinuousBatchingLoop(
+            kernels, params, capacity=4, chunk=2, calib_gen=3,
+            report=_report(), slo=SLO(ttft_s=1e9, tok_s=1e9), rounds=rounds,
+        )
+        return loop, loop.run(trace), trace
+
+    loop_r, summary_r, trace_r = run_with(workers)
+    loop_p, summary_p, trace_p = run_with(None)
+
+    # pool rows apportioned by calibrated speed (4 rows over 2:1 workers)
+    assert loop_r.rounds_plan.counts_by_worker(0).tolist() == [3, 1]
+    assert loop_r.n_round_workers == summary_r.n_round_workers == 2
+    # the ledger: one fused dispatch per WORKER per chunk, nothing hidden
+    assert summary_r.dispatches_per_chunk == 2.0
+    assert loop_r.stats.dispatches == 2 * loop_r.n_chunks
+    assert summary_p.dispatches_per_chunk == 1.0
+
+    # bitwise: every request's token row identical across the two paths
+    assert summary_r.n_done == summary_p.n_done == 6
+    for a, b in zip(trace_r, trace_p):
+        assert a.state == b.state == "done"
+        assert a.tokens == b.tokens, f"rid {a.rid} diverged under --rounds"
+
+    # deterministic under VirtualClock: a rerun reproduces the summary
+    _, again, _ = run_with(workers)
+    assert again.to_dict() == summary_r.to_dict()
+
+
+def test_fully_shed_trace_serializes_strict_json(served, tmp_path):
+    """Regression: a fully-shed trace has no TTFT/latency samples, so the
+    percentiles are NaN — they must serialize as null (strict JSON), never
+    as the bare NaN literal that breaks downstream parsers."""
+    import json
+
+    cfg, kernels, params = served
+    loop = ContinuousBatchingLoop(
+        kernels, params, capacity=2, chunk=2, calib_gen=3,
+        report=_report(), slo=SLO(ttft_s=1e-9, tok_s=1e9),
+    )
+    trace = _trace(cfg, 4, rate=1000.0, seed=11)
+    summary = loop.run(trace)
+    assert summary.n_done == 0 and summary.n_shed == len(trace)
+    assert np.isnan(summary.ttft_p50_s)  # in-process floats stay NaN...
+
+    d = summary.to_dict()
+    assert d["ttft_p50_s"] is None and d["ttft_p99_s"] is None  # ...JSON gets null
+    text = json.dumps(d, allow_nan=False)  # strict mode must not raise
+    assert "NaN" not in text
+    assert json.loads(text)["ttft_p50_s"] is None
+
+    path = tmp_path / "shed_trace.json"
+    loop.write_trace(str(path))  # write_trace is allow_nan=False-gated too
+    rows = json.loads(path.read_text())
+    assert len(rows) == 4 and all(r["state"] == "shed" for r in rows)
+
+
 # ---------------------------------------------------------------------------
 # Engine protocol conformance
 # ---------------------------------------------------------------------------

@@ -1,0 +1,139 @@
+"""launch/submit.py: batch-system script generation for a RoundPlan —
+golden dry-run output for both dialects, job coverage, the auto-assigned
+stdout/stderr rule, and dependency threading."""
+
+import json
+import os
+
+import pytest
+
+from repro.launch.submit import (
+    BATCH_SYSTEMS,
+    main,
+    materialize,
+    render_script,
+    submit_command,
+)
+from repro.runtime.rounds import RoundPlan, RoundWorker, plan_rounds
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return plan_rounds(64, [RoundWorker(f"n{i}", r) for i, r in enumerate([4, 2, 1, 1])])
+
+
+def test_materialize_covers_every_job_both_systems(plan, tmp_path):
+    specs = plan.job_specs()
+    for system in BATCH_SYSTEMS:
+        wd = str(tmp_path / system)
+        out = materialize(plan, system, wd, dry_run=True)
+        assert [j["name"] for j, _, _ in out] == [j["name"] for j in specs]
+        for job, path, argv in out:
+            assert os.path.exists(path) and os.access(path, os.X_OK)
+            text = open(path).read()
+            assert text.startswith("#!/bin/bash")
+            # payload re-reads the shared plan and runs this job's step
+            assert f"--worker-step {job['round']}:{job['slot']}" in text
+            assert os.path.join(wd, "plan.json") in text
+        # the serialized plan round-trips to the same schedule
+        with open(os.path.join(wd, "plan.json")) as f:
+            assert RoundPlan.from_json(json.load(f)) == plan
+
+
+def test_slurm_golden_headers_and_dependencies(plan, tmp_path):
+    wd = str(tmp_path)
+    out = materialize(plan, "slurm", wd, batch_options=["--partition=batch", "--mem", "4G"])
+    first = open(out[0][1]).read().splitlines()
+    assert first[:6] == [
+        "#!/bin/bash",
+        "#SBATCH --job-name=round0_worker0",
+        f"#SBATCH --output={wd}/logs/round0_worker0.out",
+        f"#SBATCH --error={wd}/logs/round0_worker0.err",
+        f"#SBATCH --chdir={wd}",
+        "#SBATCH --partition=batch",
+    ]
+    assert first[6] == "#SBATCH --mem 4G"  # multi-token extras stay on one line
+    # round-0 jobs submit bare; merge jobs ride --dependency=afterok with
+    # per-dependency placeholders in a dry run
+    for job, _, argv in out:
+        assert argv[0] == "sbatch"
+        if job["round"] == 0:
+            assert not any(a.startswith("--dependency") for a in argv)
+        else:
+            dep = [a for a in argv if a.startswith("--dependency=afterok:")]
+            assert len(dep) == 1
+            assert all(f"<jobid:{d}>" in dep[0] for d in job["depends"])
+
+
+def test_sge_golden_headers_and_holds(plan, tmp_path):
+    wd = str(tmp_path)
+    out = materialize(plan, "sge", wd, batch_options=["-q", "long.q"])
+    merge = next(j for j, _, _ in out if j["round"] > 0)
+    text = open(next(p for j, p, _ in out if j is merge)).read().splitlines()
+    assert text[:7] == [
+        "#!/bin/bash",
+        f"#$ -N {merge['name']}",
+        f"#$ -o {wd}/logs/{merge['name']}.out",
+        f"#$ -e {wd}/logs/{merge['name']}.err",
+        f"#$ -wd {wd}",
+        "#$ -S /bin/bash",
+        f"#$ -hold_jid {','.join(merge['depends'])}",
+    ]
+    assert "#$ -q long.q" in text
+    # sge dependencies are name-holds in the script, not argv flags
+    for _, path, argv in out:
+        assert argv == ["qsub", path]
+
+
+@pytest.mark.parametrize("system,opt", [
+    ("slurm", "-o"), ("slurm", "--output=x.log"), ("slurm", "--error"),
+    ("sge", "-o"), ("sge", "-e"),
+])
+def test_stdout_stderr_overrides_rejected(plan, tmp_path, system, opt):
+    """Per-job stdout/stderr paths are auto-assigned under <workdir>/logs/
+    (the merge rounds parse them); user overrides must be refused."""
+    with pytest.raises(ValueError, match="auto-assigned"):
+        materialize(plan, system, str(tmp_path), batch_options=[opt])
+
+
+def test_unknown_batch_system_rejected(plan, tmp_path):
+    with pytest.raises(ValueError, match="unknown batch system"):
+        materialize(plan, "pbs", str(tmp_path))
+    with pytest.raises(ValueError, match="unknown batch system"):
+        render_script("pbs", plan.job_specs()[0], str(tmp_path))
+
+
+def test_non_dry_run_threads_slurm_job_ids(plan, tmp_path):
+    """Submitted slurm job ids are parsed from sbatch stdout and threaded
+    into later rounds' afterok lists (no placeholders remain)."""
+    submitted = []
+
+    class Proc:
+        def __init__(self, stdout):
+            self.stdout = stdout
+
+    def runner(argv):
+        submitted.append(argv)
+        return Proc(f"Submitted batch job {1000 + len(submitted)}")
+
+    out = materialize(plan, "slurm", str(tmp_path), dry_run=False, runner=runner)
+    assert len(submitted) == len(plan.job_specs())
+    name_to_id = {job["name"]: str(1001 + i) for i, (job, _, _) in enumerate(out)}
+    for job, _, argv in out:
+        if job["depends"]:
+            dep = next(a for a in argv if a.startswith("--dependency=afterok:"))
+            ids = dep.split("afterok:", 1)[1].split(":")
+            assert ids == [name_to_id[d] for d in job["depends"]]
+            assert not any("<jobid" in i for i in ids)
+
+
+def test_cli_dry_run_prints_scripts_and_submits_nothing(plan, tmp_path, capsys):
+    plan_path = tmp_path / "plan.json"
+    plan_path.write_text(json.dumps(plan.to_json()))
+    main(["--batch-system", "sge", "--workdir", str(tmp_path / "wd"),
+          "--plan-json", str(plan_path), "--dry-run"])
+    text = capsys.readouterr().out
+    assert "(dry run: nothing submitted)" in text
+    for job in plan.job_specs():
+        assert f"-N {job['name']}" in text
+    assert f"{len(plan.job_specs())} jobs" in text

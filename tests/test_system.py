@@ -193,3 +193,61 @@ def test_train_fused_steps_deterministic(tmp_path):
     c_last = records(tmp_path / "c.jsonl")[-1]
     assert a_last["step"] == c_last["step"] == 7
     assert a_last["loss"] == c_last["loss"], (a_last, c_last)
+
+
+# ---------------------------------------------------------------------------
+# Monotonic-clock regressions (launch-side twins of the serving
+# test_decode_batch_uses_monotonic_clock)
+# ---------------------------------------------------------------------------
+
+
+def test_train_wall_survives_backwards_clock(subproc):
+    """Regression: launch/train.py's wall duration must come from
+    perf_counter — under a wall clock stepping BACKWARD (NTP adjustment)
+    the reported wall seconds stay non-negative."""
+    subproc(
+        """
+import contextlib, io, itertools, re, sys, time
+ticks = itertools.count()
+time.time = lambda: 1e9 - 10.0 * next(ticks)  # strictly decreasing
+sys.argv = ["train", "--arch", "qwen2-7b", "--smoke",
+            "--steps", "2", "--batch", "2", "--seq-len", "16"]
+from repro.launch.train import main
+buf = io.StringIO()
+with contextlib.redirect_stdout(buf):
+    main()
+m = re.search(r"wall=([-0-9.]+)s", buf.getvalue())
+assert m, buf.getvalue()
+assert float(m.group(1)) >= 0.0, f"negative wall under backwards clock: {m.group(1)}"
+print("train wall ok:", m.group(1))
+""",
+        n_devices=1,
+    )
+
+
+def test_dryrun_durations_survive_backwards_clock(subproc):
+    """Regression: launch/dryrun.py's lower_s/compile_s must come from
+    perf_counter.  build_cell is stubbed (no 512-device compile); only the
+    timed path around lower()/compile() runs, under a backwards clock."""
+    subproc(
+        """
+import itertools, time
+import repro.launch.dryrun as dryrun_mod
+ticks = itertools.count()
+time.time = lambda: 1e9 - 10.0 * next(ticks)  # strictly decreasing
+
+class Compiled:
+    def memory_analysis(self): return object()
+    def cost_analysis(self): return {"flops": 1.0}
+class Lowered:
+    def compile(self): return Compiled()
+class Jitted:
+    def lower(self, *a): return Lowered()
+
+dryrun_mod.build_cell = lambda *a, **k: (Jitted(), (), None, None)
+rec = dryrun_mod.run_cell("qwen2-7b", "train_4k", False, full_analysis=False)
+assert rec["lower_s"] >= 0.0 and rec["compile_s"] >= 0.0, rec
+print("dryrun durations ok:", rec["lower_s"], rec["compile_s"])
+""",
+        n_devices=1,
+    )
